@@ -1,0 +1,42 @@
+"""Fig. 10: MiniLoader memory overhead + memory usage time (Mini vs
+PISeL).
+
+Paper claims: placeholder memory = 1/32 of fp32 (1-bit vs 4-byte);
+memory usage *time* increases under Mini (~+27% avg) because faster
+construction presses more concurrent placeholders into the weight-wait
+interval.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(args=None):
+    args = args or common.std_parser(
+        strategies=["pisel", "mini"]).parse_args([])
+    store, _ = common.deployed_store(args)
+    rows = []
+    for name in common.model_list(args):
+        rec = {}
+        for strat in ("pisel", "mini"):
+            res = common.load_with_strategy(store, name, strat, args.quick)
+            tr = res.trace
+            rec[strat] = (tr.memory_total_bytes(),
+                          tr.memory_overhead_bytes(),
+                          tr.memory_usage_time())
+            rows.append([f"fig10/{name}/{strat}",
+                         tr.memory_usage_time() * 1e6,
+                         tr.memory_total_bytes() / 1e6])
+        ratio = rec["pisel"][0] / max(rec["mini"][0], 1)
+        dt = (rec["mini"][2] / max(rec["pisel"][2], 1e-9) - 1.0)
+        print(f"# fig10 {name}: placeholder-bytes ratio pisel/mini = "
+              f"{ratio:.1f}x (paper: 32x); usage-time delta = {dt:+.1%} "
+              f"(paper: +27% avg)")
+    common.print_csv(["name", "us_per_call", "mem_total_mb"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(common.std_parser().parse_args())

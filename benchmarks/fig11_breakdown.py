@@ -1,0 +1,50 @@
+"""Fig. 11: per-pipeline-unit working/waiting time breakdown.
+
+Paper claims: Mini cuts Layer Work ~63% on average vs PISeL; Preload
+cuts Weight Work ~78% (retrieval moves into the overlapped Preload
+row); waits (Weight Wait / Compute Wait) grow under both — acceptable
+because E2E still drops.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(args=None):
+    args = args or common.std_parser().parse_args([])
+    store, _ = common.deployed_store(args)
+    rows = []
+    per_strat = {}
+    for name in common.model_list(args):
+        for strat in args.strategies:
+            res = common.load_with_strategy(store, name, strat, args.quick)
+            s = res.trace.summary()
+            per_strat.setdefault(strat, {})[name] = s
+            for k in ("work_L", "work_R", "work_A", "work_E",
+                      "wait_A", "wait_E"):
+                rows.append([f"fig11/{name}/{strat}/{k}", s[k] * 1e6,
+                             s[k] * 1e3])
+    if "pisel" in per_strat and "mini" in per_strat:
+        red = [1 - per_strat["mini"][n]["work_L"]
+               / max(per_strat["pisel"][n]["work_L"], 1e-9)
+               for n in per_strat["pisel"]]
+        print(f"# fig11 Layer-Work reduction mini vs pisel: "
+              f"{np.mean(red):.1%} (paper: 63.1% avg)")
+    if "pisel" in per_strat and "preload" in per_strat:
+        # PISeL's Weight unit does retrieval + apply (R+A); under the
+        # WeightDecoupler retrieval moves to the overlapped Preload row
+        # so the Weight unit's work is A alone.
+        red = [1 - per_strat["preload"][n]["work_A"]
+               / max(per_strat["pisel"][n]["work_A"]
+                     + per_strat["pisel"][n]["work_R"], 1e-9)
+               for n in per_strat["pisel"]]
+        print(f"# fig11 Weight-Work reduction preload vs pisel: "
+              f"{np.mean(red):.1%} (paper: 78.4% avg)")
+    common.print_csv(["name", "us_per_call", "ms"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(common.std_parser().parse_args())

@@ -1,0 +1,43 @@
+"""Figs. 12-13: pipeline utilization (merged busy / total) and the
+active-vs-total decomposition.
+
+Paper claims: strategies with MiniLoader reach ~99%+ utilization vs
+28-70% without — up to 2.52x — because PISeL's total pipeline time far
+exceeds its active time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(args=None):
+    args = args or common.std_parser().parse_args([])
+    store, _ = common.deployed_store(args)
+    rows = []
+    utils = {}
+    for name in common.model_list(args):
+        for strat in args.strategies:
+            res = common.load_with_strategy(store, name, strat, args.quick)
+            tr = res.trace
+            u = tr.utilization()
+            utils.setdefault(strat, []).append(u)
+            rows.append([f"fig12/{name}/{strat}", tr.total_time() * 1e6, u])
+            rows.append([f"fig13/{name}/{strat}/active",
+                         tr.busy_time() * 1e6, tr.busy_time() * 1e3])
+    for s in args.strategies:
+        if s in utils:
+            print(f"# fig12 mean utilization [{s}]: "
+                  f"{np.mean(utils[s]):.1%}")
+    if "pisel" in utils and "cicada" in utils:
+        speedup = np.mean(utils["cicada"]) / max(np.mean(utils["pisel"]),
+                                                 1e-9)
+        print(f"# fig12 utilization speedup cicada/pisel: {speedup:.2f}x "
+              f"(paper: up to 2.52x)")
+    common.print_csv(["name", "us_per_call", "value"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(common.std_parser().parse_args())

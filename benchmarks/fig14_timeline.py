@@ -1,0 +1,36 @@
+"""Fig. 14: pipeline timeline (Gantt) per model x strategy.
+
+Renders the ASCII Gantt (rows: Layer / Retrieve / Weight / Compute) and
+emits the raw rows as CSV for plotting.  The qualitative patterns to
+look for (paper Sec. V-D): Mini shortens the Layer row; Preload/Cicada
+add the overlapped Retrieve row and start Weight immediately after
+Layer; Cicada's Compute row starts earliest.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(args=None):
+    args = args or common.std_parser(
+        models=["resnet50"], strategies=["pisel", "cicada"]
+    ).parse_args([])
+    store, _ = common.deployed_store(args)
+    rows = []
+    for name in common.model_list(args):
+        for strat in args.strategies:
+            res = common.load_with_strategy(store, name, strat, args.quick)
+            tr = res.trace
+            print(f"## {name} / {strat} "
+                  f"(total {tr.total_time() * 1e3:.1f} ms, "
+                  f"util {tr.utilization():.0%})")
+            print(tr.render_gantt(90))
+            for g in tr.gantt_rows():
+                rows.append([f"fig14/{name}/{strat}/{g['row']}/{g['layer']}",
+                             (g["end"] - g["start"]) * 1e6, g["start"] * 1e3])
+    common.print_csv(["name", "us_per_call", "start_ms"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(common.std_parser().parse_args())

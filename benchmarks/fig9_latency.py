@@ -1,0 +1,44 @@
+"""Fig. 9: end-to-end inference latency per model x strategy.
+
+Paper claims to validate: Preload/Mini/Cicada reduce latency vs PISeL by
+~6% / ~53% / ~62% on average; MiniLoader dominates the win; the VGG
+family benefits most from MiniLoader.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(args=None):
+    args = args or common.std_parser().parse_args([])
+    store, _ = common.deployed_store(args)
+    rows = []
+    summary = {}
+    for name in common.model_list(args):
+        lat = {}
+        for strat in args.strategies:
+            ts = []
+            for _ in range(args.repeats):
+                res = common.load_with_strategy(store, name, strat,
+                                                args.quick)
+                ts.append(res.trace.total_time())
+            lat[strat] = float(np.median(ts))
+            rows.append([f"fig9/{name}/{strat}", lat[strat] * 1e6,
+                         lat[strat] * 1e3])
+        if "pisel" in lat:
+            for s in lat:
+                if s != "pisel":
+                    summary.setdefault(s, []).append(
+                        1.0 - lat[s] / lat["pisel"])
+    common.print_csv(["name", "us_per_call", "latency_ms"], rows)
+    for s, reds in sorted(summary.items()):
+        print(f"# fig9 mean latency reduction vs PISeL [{s}]: "
+              f"{np.mean(reds):+.1%}  (paper: mini 53.4%, cicada 61.6%, "
+              f"preload 6.2%)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(common.std_parser(repeats=3).parse_args())

@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks: XLA-fallback wall time on CPU (structural —
+the Pallas kernels target TPU; interpret mode is a correctness harness,
+not a performance surface) + analytic VMEM footprints of the chosen
+BlockSpecs, which is the number that matters for the TPU target.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def timeit(f, *a, n=5):
+    f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else \
+        jax.block_until_ready(f(*a))
+    t0 = time.monotonic()
+    for _ in range(n):
+        jax.block_until_ready(f(*a))
+    return (time.monotonic() - t0) / n
+
+
+def vmem_bytes_flash(bq=256, bk=256, dh=128):
+    # q + k + v + acc(f32) + m/l scratch
+    return (bq * dh * 2 + 2 * bk * dh * 2 + bq * dh * 4
+            + 2 * bq * 128 * 4)
+
+
+def run(args=None):
+    r = np.random.default_rng(0)
+    rows = []
+
+    B, H, K, S, dh = 1, 8, 2, 1024, 128
+    q = jnp.asarray(r.standard_normal((B, S, H, dh)), jnp.bfloat16)
+    k = jnp.asarray(r.standard_normal((B, S, K, dh)), jnp.bfloat16)
+    v = jnp.asarray(r.standard_normal((B, S, K, dh)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True))
+    t = timeit(f, q, k, v)
+    rows.append(["kernel/flash_attention_xla_1k", t * 1e6,
+                 2 * 2 * B * H * S * S * dh / t / 1e9])
+
+    kc = jnp.asarray(r.standard_normal((4, K, 2048, dh)), jnp.bfloat16)
+    vc = kc
+    q1 = jnp.asarray(r.standard_normal((4, H, dh)), jnp.bfloat16)
+    pos = jnp.full((4,), 2047, jnp.int32)
+    f2 = jax.jit(lambda q, a, b, p: ops.decode_attention(q, a, b, p))
+    t = timeit(f2, q1, kc, vc, pos)
+    rows.append(["kernel/decode_attention_xla_2k", t * 1e6,
+                 kc.nbytes * 2 / t / 1e9])
+
+    x = jnp.asarray(r.standard_normal((2, 8, 512, 64)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(r.standard_normal((2, 8, 512)),
+                             jnp.float32)) * 0.1
+    A = -jnp.ones((8,))
+    Bm = jnp.asarray(r.standard_normal((2, 512, 64)), jnp.float32)
+    f3 = jax.jit(lambda *a: ops.ssd_scan(*a, bc=128))
+    t = timeit(f3, x, dt, A, Bm, Bm)
+    rows.append(["kernel/ssd_scan_xla_512", t * 1e6, 0.0])
+
+    a = jnp.abs(jnp.asarray(r.standard_normal((2, 1024, 256)),
+                            jnp.float32)) * 0.3
+    b = jnp.asarray(r.standard_normal((2, 1024, 256)), jnp.float32)
+    f4 = jax.jit(ops.rglru_scan)
+    t = timeit(f4, a, b)
+    rows.append(["kernel/rglru_scan_xla_1k", t * 1e6, 0.0])
+
+    w8 = jnp.asarray(r.integers(-127, 128, (4096, 4096)), jnp.int8)
+    sc = jnp.abs(jnp.asarray(r.standard_normal(4096), jnp.float32))
+    f5 = jax.jit(lambda w, s: ops.weight_transform(w, s))
+    t = timeit(f5, w8, sc)
+    rows.append(["kernel/weight_transform_16M", t * 1e6,
+                 w8.nbytes / t / 1e9])
+
+    # TPU-target VMEM budgets (static analysis of BlockSpecs)
+    rows.append(["kernel/flash_vmem_kb", vmem_bytes_flash() / 1024, 0.0])
+    common.print_csv(["name", "us_per_call", "derived_gbps"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,123 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape)
+from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs_dev / peak_FLOP/s          (197 TF bf16)
+    memory term     = HLO_bytes_dev / HBM_bw               (819 GB/s)
+    collective term = collective_bytes_dev / link_bw       (50 GB/s ICI)
+
+(`*_dev` are per-device numbers from the SPMD-partitioned module, so
+dividing by per-chip peaks is the same as global/chips x peak.)
+
+Also reported per cell: the dominant term, MODEL_FLOPS = 6*N*D (dense;
+N_active for MoE; D = tokens processed), the usefulness ratio
+MODEL_FLOPS / HLO_FLOPS_global (catches remat/redundancy waste), and a
+one-line lever on the dominant term.
+
+Input: the JSON written by ``python -m repro.launch.dryrun --all
+--both-meshes --out dryrun_results.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES
+from repro.models.api import get_config
+
+PEAK_FLOPS = 197e12          # v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+LEVERS = {
+    "compute": "raise arithmetic efficiency: fuse ops/skip masked work "
+               "(causal flash), drop remat recompute on cheap layers",
+    "memory": "cut HBM traffic: larger fused blocks, bf16 activations, "
+              "keep weights resident across microbatches",
+    "collective": "reshard: move the gather/reduce off the critical "
+                  "axis, overlap collectives with compute, int8 "
+                  "compress the DP reduce",
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.seq * cell.batch
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.seq * cell.batch
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.batch          # decode: one token per row
+
+
+def analyze(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok" or "cost_per_device" not in rec:
+        return None
+    c = rec["cost_per_device"]
+    devices = rec.get("devices", 256)
+    t_compute = c["flops"] / PEAK_FLOPS
+    t_memory = c["bytes"] / HBM_BW
+    t_coll = c["collectives"]["total"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = c["flops"] * devices
+    useful = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model FLOPs per second achievable at the
+    # bound, over the chip's peak
+    ach = mf / devices / max(bound, 1e-12)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": useful,
+        "roofline_frac": ach / PEAK_FLOPS,
+        "fits_hbm": rec["memory"]["fits_hbm_16g"],
+        "live_gib": rec["memory"]["live_bytes_per_device"] / 2 ** 30,
+        "lever": LEVERS[dom],
+    }
+
+
+def run(path: str = "dryrun_results.json", mesh: str = "16x16"):
+    if not os.path.exists(path):
+        print(f"# roofline: {path} not found — run "
+              f"`python -m repro.launch.dryrun --all --both-meshes --out "
+              f"{path}` first")
+        return []
+    with open(path) as f:
+        records = json.load(f)
+    rows: List[List] = []
+    print("arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "roofline_frac,useful_ratio,live_gib,fits_hbm")
+    for rec in records:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skip":
+            print(f"{rec['arch']},{rec['shape']},,,,"
+                  f"skip({rec['skip_reason'][:40]}),,,,")
+            continue
+        a = analyze(rec)
+        if a is None:
+            continue
+        print(f"{a['arch']},{a['shape']},{a['t_compute_s']:.4e},"
+              f"{a['t_memory_s']:.4e},{a['t_collective_s']:.4e},"
+              f"{a['dominant']},{a['roofline_frac']:.3f},"
+              f"{a['useful_ratio']:.3f},{a['live_gib']:.2f},"
+              f"{int(a['fits_hbm'])}")
+        rows.append(a)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="path", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="16x16")
+    a = ap.parse_args()
+    run(a.path, a.mesh)

@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--sweep]
+
+Sections:
+  fig9   end-to-end latency per model x strategy
+  fig10  MiniLoader memory overhead + usage time
+  fig11  per-unit work/wait breakdown
+  fig12  pipeline utilization (+ fig13 active/total)
+  fig14  Gantt timelines
+  trace  Azure-like trace replay through the platform
+  kernels micro-benches + VMEM budgets
+  roofline  three-term analysis from dryrun_results.json (if present)
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import (common, fig9_latency, fig10_memory, fig11_breakdown,
+                        fig12_utilization, fig14_timeline, kernels_micro,
+                        roofline, trace_bench)
+
+
+def main() -> None:
+    args = common.std_parser().parse_args()
+    t0 = time.monotonic()
+    sections = [
+        ("fig9", lambda: fig9_latency.run(args)),
+        ("fig10", lambda: fig10_memory.run(args)),
+        ("fig11", lambda: fig11_breakdown.run(args)),
+        ("fig12", lambda: fig12_utilization.run(args)),
+        ("fig14", lambda: fig14_timeline.run(args)),
+        ("trace", lambda: trace_bench.run(args)),
+        ("kernels", lambda: kernels_micro.run(args)),
+        ("roofline", lambda: roofline.run()),
+    ]
+    for name, fn in sections:
+        print(f"\n=== {name} " + "=" * (68 - len(name)), flush=True)
+        fn()
+    print(f"\n# benchmarks completed in {time.monotonic() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

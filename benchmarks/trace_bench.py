@@ -1,0 +1,47 @@
+"""Fig. 8 analogue: trace-driven platform replay — cold/warm mix and
+per-strategy mean latency under the bursty Azure-like workload."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.serving.engine import ServerlessPlatform
+from repro.serving.trace import azure_like_trace, summarize
+
+
+def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada")):
+    args = args or common.std_parser(models=["resnet50"]).parse_args([])
+    store, _ = common.deployed_store(args)
+    rows = []
+    models = common.model_list(args)
+    for name in models:
+        common.ensure_deployed(store, name, args.quick)
+    trace = azure_like_trace(duration_s=240.0, n_invocations=n_invocations,
+                             models=models, seed=0)
+    print(f"# trace: {summarize(trace)}")
+    for strat in strategies:
+        builders = {}
+        for name in models:
+            cfg, model = common.get_model(name, args.quick)
+            builders[name] = (lambda m=model, c=cfg:
+                              (m, common.make_batch(c)))
+        platform = ServerlessPlatform(store, builders, strategy=strat,
+                                      keep_alive_s=45.0)
+        rs = platform.run_trace(trace,
+                                lambda n: common.make_batch(
+                                    common.get_model(n, args.quick)[0]))
+        lat = np.array([r.latency_s for r in rs])
+        cold = np.array([r.cold for r in rs])
+        rows.append([f"trace/{strat}/mean", lat.mean() * 1e6,
+                     float(cold.mean())])
+        rows.append([f"trace/{strat}/p99",
+                     np.percentile(lat, 99) * 1e6, 0.0])
+        if cold.any():
+            rows.append([f"trace/{strat}/cold_mean",
+                         lat[cold].mean() * 1e6, int(cold.sum())])
+    common.print_csv(["name", "us_per_call", "derived"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

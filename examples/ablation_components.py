@@ -1,0 +1,50 @@
+"""Component ablation (the paper's Mini / Preload / Cicada decomposition)
+on one model: which mechanism buys what.
+
+    PYTHONPATH=src python examples/ablation_components.py
+"""
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import ColdStartEngine  # noqa: E402
+from repro.models import transformer  # noqa: E402
+from repro.models.api import get_config  # noqa: E402
+from repro.store.store import (BandwidthModel, WeightStore,  # noqa: E402
+                               deploy_model)
+
+
+def main():
+    cfg = get_config("resnet50", smoke=True)
+    model = transformer.build(cfg)
+    store = WeightStore(tempfile.mkdtemp(),
+                        BandwidthModel(bandwidth_mbps=300, latency_ms=0.3))
+    deploy_model(store, model, "m", jax.random.key(0))
+    batch = {"image": jnp.asarray(
+        np.random.default_rng(0).standard_normal(
+            (1, 3, cfg.img_res, cfg.img_res)), jnp.float32)}
+
+    print(f"{'strategy':12s} {'e2e ms':>8s} {'util':>6s} {'L ms':>7s} "
+          f"{'R ms':>7s} {'A ms':>7s} {'mem KB':>8s}")
+    base = None
+    for strat in ("traditional", "pisel", "mini", "preload", "cicada"):
+        eng = ColdStartEngine(model, "m", store, strategy=strat)
+        eng.warmup(batch)
+        s = eng.load(batch).trace.summary()
+        if strat == "pisel":
+            base = s["total_s"]
+        delta = "" if base is None or strat == "pisel" else \
+            f"  ({1 - s['total_s'] / base:+.0%} vs pisel)"
+        print(f"{strat:12s} {s['total_s'] * 1e3:8.1f} "
+              f"{s['utilization']:6.0%} {s['work_L'] * 1e3:7.1f} "
+              f"{s['work_R'] * 1e3:7.1f} {s['work_A'] * 1e3:7.1f} "
+              f"{s['mem_overhead_bytes'] / 1e3:8.1f}{delta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""End-to-end serverless serving driver (deliverable b): replay a
+bursty Azure-like trace against a multi-model platform, comparing
+strategies.
+
+    PYTHONPATH=src python examples/serve_trace.py [--full]
+
+--full uses the paper's actual model sizes (ResNet-50 at 224x224 etc.)
+— several minutes on CPU; default uses smoke variants.
+"""
+import argparse
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    store = tempfile.mkdtemp(prefix="cicada-trace-")
+    common = ["--models", "smollm-360m", "mamba2-780m-smoke"
+              if False else "smollm-360m",
+              "--invocations", "16", "--duration", "300",
+              "--keep-alive", "20", "--store", store,
+              "--bandwidth-mbps", "600"]
+    if args.full:
+        common += ["--full"]
+
+    results = {}
+    for strategy in ("pisel", "cicada"):
+        print(f"\n===== strategy: {strategy} =====")
+        responses = serve_main(common + ["--strategy", strategy])
+        lat = np.array([r.latency_s for r in responses])
+        results[strategy] = lat
+    speedup = results["pisel"].mean() / results["cicada"].mean()
+    print(f"\nmean-latency speedup cicada vs pisel: {speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Config registry: importing this package registers every architecture.
+
+  * the 10 assigned LM-family archs (``lm_archs``) — full + smoke,
+  * the paper's own ResNet/VGG/ViT families (``vision_archs``),
+  * the shape cells (``shapes``).
+
+``repro.models.api.get_config(name, smoke=...)`` is the lookup API.
+"""
+from repro.configs import lm_archs  # noqa: F401
+from repro.configs import vision_archs  # noqa: F401
+from repro.configs.lm_archs import ASSIGNED  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeCell, smoke_cell, supported  # noqa: F401

@@ -1,0 +1,289 @@
+"""ColdStartEngine: request -> live model, through the paper's pipeline.
+
+Three execution units run as threads (exactly the paper's decomposition):
+
+  * **Layer unit** — constructs unit structures in order (MiniLoader or
+    PISeL-faithful numerical init);
+  * **Weight unit** — applies retrieved weights.  Under the
+    WeightDecoupler, retrieval streams were issued at request arrival on
+    an I/O pool and application is out-of-order; under PISeL, retrieval
+    is fused into this unit and strictly ordered after L_i;
+  * **Compute unit** — executes layer i's forward as soon as its weights
+    are applied (and layer i-1 executed): the triggering request is
+    answered *while the model is still loading*.
+
+After the pipeline drains, the per-unit parameters are assembled into
+the steady-state (scan-stacked) representation and handed to the serving
+engine for warm requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import miniloader
+from repro.core.decoupler import WeightDecoupler
+from repro.core.pipeline import PipelineTrace
+from repro.core.scheduler import PriorityAwareScheduler
+from repro.core.strategies import Strategy, get_strategy
+from repro.kernels import ops
+from repro.store.store import WeightStore, unflatten_unit
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LoadResult:
+    logits: jax.Array            # first-request output (computed in-pipeline)
+    params: PyTree               # assembled steady-state parameters
+    trace: PipelineTrace
+    strategy: str
+
+
+class ColdStartEngine:
+    def __init__(self, model, model_name: str, store: WeightStore, *,
+                 strategy: str = "cicada", io_workers: int = 4,
+                 chunk_bytes: int = 1 << 20,
+                 apply_dtype=None):
+        """apply_dtype: cast weights to this dtype at application time
+        (None -> keep stored dtype)."""
+        self.model = model
+        self.model_name = model_name
+        self.store = store
+        self.strategy: Strategy = get_strategy(strategy)
+        self.io_workers = io_workers
+        self.chunk_bytes = chunk_bytes
+        self.apply_dtype = apply_dtype
+        self._jit_apply: Dict[str, Any] = {}
+
+    # -------------------------------------------------------------- helpers
+    def _apply_fn(self, unit: str):
+        if unit not in self._jit_apply:
+            model = self.model
+            self._jit_apply[unit] = jax.jit(
+                lambda p, s, _u=unit: model.unit_apply(_u, p, s))
+        return self._jit_apply[unit]
+
+    def warmup(self, batch: Dict[str, jax.Array]):
+        """Pre-compile per-unit forwards (deploy-time step, like a
+        serverless snapshot of compiled code) so first-request E_i
+        timings measure execution, not XLA compilation."""
+        names = self.model.unit_names()
+        keys = jax.random.split(jax.random.key(0), len(names))
+        state: Dict[str, Any] = {"batch": batch}
+        for name, k in zip(names, keys):
+            self.model.abstract_unit(name)   # precompute static structure
+            p = self.model.init_unit(name, k)
+            state = self._apply_fn(name)(p, state)
+        jax.block_until_ready(state["logits"])
+
+    def _apply_leaves(self, unit: str, abstract: PyTree, leaves) -> PyTree:
+        """The weight-application compute phase: dequant/cast (fused
+        ``weight_transform`` kernel) + device placement."""
+        flat = {}
+        for name, (arr, scale) in leaves.items():
+            if scale is not None:                      # int8 extent
+                out_dt = self.apply_dtype or jnp.float32
+                deq = ops.weight_transform(jnp.asarray(arr),
+                                           jnp.asarray(scale),
+                                           out_dtype=out_dt)
+                flat[name] = deq.reshape(self._leaf_shape(abstract, name))
+            elif self.apply_dtype is not None and \
+                    np.issubdtype(arr.dtype, np.floating):
+                flat[name] = ops.weight_transform(
+                    jnp.asarray(arr).reshape(arr.shape[0], -1)
+                    if arr.ndim >= 2 else jnp.asarray(arr)[None],
+                    None, out_dtype=self.apply_dtype).reshape(arr.shape)
+            else:
+                flat[name] = jax.device_put(arr)
+        tree = unflatten_unit(abstract, flat)
+        return jax.block_until_ready(tree)
+
+    @staticmethod
+    def _leaf_shape(abstract: PyTree, name: str):
+        flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
+        for path, leaf in flat:
+            n = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path)
+            if n == name:
+                return leaf.shape
+        raise KeyError(name)
+
+    # ----------------------------------------------------------------- load
+    def load(self, batch: Dict[str, jax.Array], *,
+             key: Optional[jax.Array] = None) -> LoadResult:
+        """Serve one cold-start request end-to-end."""
+        strat = self.strategy
+        model = self.model
+        units = model.unit_names()
+        key = key if key is not None else jax.random.key(0)
+        keys = list(jax.random.split(key, len(units)))
+
+        trace = PipelineTrace()
+        scheduler = PriorityAwareScheduler(enabled=strat.scheduler)
+        dec = WeightDecoupler(self.store, self.model_name, scheduler, trace,
+                              io_workers=self.io_workers,
+                              chunk_bytes=self.chunk_bytes)
+        trace.start()
+
+        if not strat.pipelined:
+            result = self._load_traditional(batch, units, keys, trace, dec)
+        else:
+            result = self._load_pipelined(batch, units, keys, trace, dec,
+                                          scheduler)
+        dec.shutdown()
+        trace.finish()
+        return result
+
+    # ------------------------------------------------- traditional (Fig. 1)
+    def _load_traditional(self, batch, units, keys, trace, dec) -> LoadResult:
+        constructed = {}
+        for u, k in zip(units, keys):                    # all L
+            with trace.record("L", u):
+                constructed[u] = miniloader.construct_unit(
+                    self.model, u, k, mini=False)
+        applied = {}
+        for u in units:                                  # monolithic W+A
+            t0 = time.monotonic()
+            leaves = dec.fetch_sync(u)                   # blocking I/O
+            t_io = time.monotonic()
+            applied[u] = self._apply_leaves(u, constructed[u].abstract,
+                                            leaves)
+            t1 = time.monotonic()
+            trace.add_event("R", u, t0, t_io)            # unit idles (DMA)
+            trace.add_event("A", u, t_io, t1)
+            trace.record_memory(u, constructed[u].mem_bytes,
+                                constructed[u].t_construct_end, t1)
+        state: Dict[str, Any] = {"batch": batch}
+        for u in units:                                  # all E
+            with trace.record("E", u):
+                state = self._apply_fn(u)(applied[u], state)
+                jax.block_until_ready(
+                    state["logits" if u == units[-1] else "x"])
+        params = self.model.assemble(applied)
+        return LoadResult(state["logits"], params, trace,
+                          self.strategy.name)
+
+    # ------------------------------------------------------- pipelined path
+    def _load_pipelined(self, batch, units, keys, trace, dec,
+                        scheduler) -> LoadResult:
+        strat = self.strategy
+        model = self.model
+        cv = threading.Condition()
+        constructed: Dict[str, miniloader.ConstructedUnit] = {}
+        applied: Dict[str, PyTree] = {}
+        errors: List[BaseException] = []
+        out: Dict[str, Any] = {}
+
+        if strat.decouple:
+            dec.prefetch(units)                 # issue I/O at request arrival
+
+        def _guard(fn):
+            def wrapped():
+                try:
+                    fn()
+                except BaseException as e:
+                    with cv:
+                        errors.append(e)
+                        cv.notify_all()
+            return wrapped
+
+        # ------------------------------------------------------ Layer unit
+        def layer_unit():
+            for u, k in zip(units, keys):
+                if strat.scheduler:
+                    scheduler.adjust_priority(u)          # Algorithm 1 at L_i
+                with trace.record("L", u):
+                    cu = miniloader.construct_unit(model, u, k,
+                                                   mini=strat.mini)
+                with cv:
+                    constructed[u] = cu
+                    cv.notify_all()
+
+        # ----------------------------------------------------- Weight unit
+        def weight_unit_decoupled():
+            pending = set(units)
+            while pending:
+                with cv:
+                    if errors:
+                        return
+                    built = {u for u in pending if u in constructed}
+                    while not built:
+                        cv.wait(0.02)
+                        if errors:
+                            return
+                        built = {u for u in pending if u in constructed}
+                # the unit the compute unit needs next:
+                critical = min(pending, key=units.index)
+                u = dec.wait_ready(built, critical=critical)
+                if u is None:
+                    continue
+                cu = constructed[u]
+                with trace.record("A", u):
+                    params = self._apply_leaves(u, cu.abstract,
+                                                dec.ready[u])
+                trace.record_memory(u, cu.mem_bytes, cu.t_construct_end,
+                                    time.monotonic())
+                with cv:
+                    applied[u] = params
+                    pending.discard(u)
+                    cv.notify_all()
+
+        def weight_unit_fused():
+            for u in units:
+                with cv:
+                    while u not in constructed and not errors:
+                        cv.wait(0.02)
+                    if errors:
+                        return
+                    cu = constructed[u]
+                t0 = time.monotonic()
+                leaves = dec.fetch_sync(u)        # W_i: fused, in-order;
+                t_io = time.monotonic()           # the unit idles on I/O
+                params = self._apply_leaves(u, cu.abstract, leaves)
+                t1 = time.monotonic()
+                trace.add_event("R", u, t0, t_io)
+                trace.add_event("A", u, t_io, t1)
+                trace.record_memory(u, cu.mem_bytes, cu.t_construct_end, t1)
+                with cv:
+                    applied[u] = params
+                    cv.notify_all()
+
+        # ---------------------------------------------------- Compute unit
+        def compute_unit():
+            state: Dict[str, Any] = {"batch": batch}
+            for u in units:
+                with cv:
+                    while u not in applied and not errors:
+                        cv.wait(0.02)
+                    if errors:
+                        return
+                with trace.record("E", u):
+                    state = self._apply_fn(u)(applied[u], state)
+                    jax.block_until_ready(
+                        state["logits" if u == units[-1] else "x"])
+            out["logits"] = state["logits"]
+
+        threads = [
+            threading.Thread(target=_guard(layer_unit), name="layer-unit"),
+            threading.Thread(target=_guard(
+                weight_unit_decoupled if strat.decouple else
+                weight_unit_fused), name="weight-unit"),
+            threading.Thread(target=_guard(compute_unit),
+                             name="compute-unit"),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+
+        params = model.assemble(applied)
+        return LoadResult(out["logits"], params, trace, strat.name)

@@ -1,0 +1,86 @@
+"""MiniLoader — opportunistic layer construction (paper Sec. III-B).
+
+Conventional construction (the PISeL-faithful path) does two things per
+layer: (1) instantiate the structure, (2) *numerically initialize* every
+parameter (Kaiming/normal draws) and materialize fp32 buffers.  In
+inference the initialization values are dead — pre-trained weights
+overwrite them — yet they cost >50 % of construction time (paper
+Fig. 5b) and a full fp32 footprint.
+
+MiniLoader replaces that with:
+
+  * **abstract construction** — ``jax.eval_shape`` builds the layer's
+    ShapeDtypeStruct tree: the structural container (shapes, dtypes,
+    tree layout) with *zero* init FLOPs;
+  * **bit-packed placeholders** — 1 bit per parameter (``ceil(n/8)``
+    uint8 bytes), exactly the paper's 1/32-of-fp32 memory, holding slot
+    identity between construction and weight application.
+
+The placeholder is dropped at application time when the retrieved bytes
+are cast/dequantized to the compute dtype (the "restore to default
+precision before weight application" step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ConstructedUnit:
+    """A layer structure produced by the Layer construction unit."""
+    name: str
+    abstract: PyTree                     # ShapeDtypeStruct tree
+    init_params: Optional[PyTree]        # PISeL path: materialized init
+    placeholders: Optional[Dict[str, np.ndarray]]  # Mini path: bit-packed
+    mem_bytes: int                       # residency between L-end and A-end
+    t_construct_end: float = 0.0
+
+    @property
+    def mini(self) -> bool:
+        return self.placeholders is not None
+
+
+def n_params(abstract: PyTree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+
+
+def full_bytes(abstract: PyTree) -> int:
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(abstract))
+
+
+def construct_unit(model, name: str, key: jax.Array, *,
+                   mini: bool) -> ConstructedUnit:
+    """The pipeline's L_i.
+
+    mini=False — PISeL-faithful: run the real numerical initialization
+    (this is deliberately the expensive path the paper measures).
+    mini=True — MiniLoader: eval_shape + 1-bit placeholders.
+    """
+    if mini:
+        abstract = model.abstract_unit(name)
+        flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
+        placeholders: Dict[str, np.ndarray] = {}
+        mem = 0
+        for path, leaf in flat:
+            pname = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                             for p in path)
+            n = int(np.prod(leaf.shape))
+            packed = np.zeros((n + 7) // 8, np.uint8)   # 1 bit / param
+            placeholders[pname] = packed
+            mem += packed.nbytes
+        return ConstructedUnit(name, abstract, None, placeholders, mem,
+                               time.monotonic())
+    params = model.init_unit(name, key)
+    params = jax.block_until_ready(params)
+    abstract = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params)
+    return ConstructedUnit(name, abstract, params, None,
+                           full_bytes(abstract), time.monotonic())

@@ -1,0 +1,117 @@
+"""Priority-Aware Scheduler (paper Sec. III-E, Algorithm 1).
+
+Asynchronous retrieval completes in unpredictable order; if layer L_i's
+structure is ready but its weight file W_i is *late* — past its expected
+completion time ``(t_issue + a) + D_{W_i}`` — every other in-flight
+retrieval stream is suspended (cooperative gates cleared) so W_i gets
+the full I/O bandwidth.  Streams resume when W_i completes.
+
+Expected durations D_W are size-based: ``nbytes / bw_estimate`` with an
+EMA of observed stream bandwidth (the paper's "records the execution
+times of each ... weight file (W) operation").  ``a`` is the measured
+pipeline-unit scheduling overhead.
+
+Complexity matches the paper: O(n) over in-flight streams to suspend,
+O(1) space per stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional
+
+HIGH = "HIGH"
+NORMAL = "NORMAL"
+
+
+@dataclasses.dataclass
+class StreamState:
+    unit: str
+    nbytes: int
+    gate: threading.Event                 # set = may run; cleared = suspended
+    t_issue: float = 0.0
+    t_done: Optional[float] = None
+    bytes_done: int = 0
+
+    @property
+    def completed(self) -> bool:
+        return self.t_done is not None
+
+
+class PriorityAwareScheduler:
+    def __init__(self, *, bw_bytes_per_s: float = 1e9,
+                 a_overhead_s: float = 1e-3, enabled: bool = True):
+        self.enabled = enabled
+        self._streams: Dict[str, StreamState] = {}
+        self._lock = threading.Lock()
+        self._bw = bw_bytes_per_s          # EMA of observed bandwidth
+        self._a = a_overhead_s
+        self._critical: Optional[str] = None
+        self.suspend_count = 0             # observability / tests
+
+    # ------------------------------------------------------------- streams
+    def register(self, unit: str, nbytes: int) -> StreamState:
+        st = StreamState(unit, nbytes, threading.Event())
+        st.gate.set()
+        with self._lock:
+            self._streams[unit] = st
+        return st
+
+    def on_issue(self, unit: str):
+        with self._lock:
+            self._streams[unit].t_issue = time.monotonic()
+
+    def on_progress(self, unit: str, done: int, total: int):
+        with self._lock:
+            self._streams[unit].bytes_done = done
+
+    def on_complete(self, unit: str):
+        with self._lock:
+            st = self._streams[unit]
+            st.t_done = time.monotonic()
+            dur = max(st.t_done - st.t_issue, 1e-9)
+            obs = st.nbytes / dur
+            self._bw = 0.7 * self._bw + 0.3 * obs
+            if self._critical == unit:
+                self._critical = None
+                for other in self._streams.values():
+                    other.gate.set()       # resume suspended streams
+
+    # ---------------------------------------------------------- Algorithm 1
+    def expected_completion(self, unit: str) -> float:
+        st = self._streams[unit]
+        return (st.t_issue + self._a) + st.nbytes / max(self._bw, 1.0)
+
+    def adjust_priority(self, unit: str) -> str:
+        """Algorithm 1: called for the layer the pipeline needs next.
+
+        If W_unit is past its expected completion and still running,
+        suspend every other in-flight stream and mark it HIGH.
+        """
+        if not self.enabled:
+            return NORMAL
+        now = time.monotonic()
+        with self._lock:
+            st = self._streams.get(unit)
+            if st is None or st.completed or st.t_issue == 0.0:
+                return NORMAL
+            if now >= self.expected_completion(unit):
+                for other in self._streams.values():       # O(n)
+                    if other.unit != unit and not other.completed:
+                        other.gate.clear()                  # block W
+                        self.suspend_count += 1
+                st.gate.set()
+                self._critical = unit
+                return HIGH
+            return NORMAL
+
+    # --------------------------------------------------------------- lookup
+    def gate(self, unit: str) -> threading.Event:
+        return self._streams[unit].gate
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"bw_estimate": self._bw,
+                    "suspends": self.suspend_count,
+                    "streams": len(self._streams)}

@@ -1,0 +1,85 @@
+"""Gradient compression for the data-parallel reduce: int8 with error
+feedback.
+
+At pod scale the DP gradient all-reduce is the dominant inter-pod
+collective (the multi-pod mesh's `pod` axis crosses DCN, ~10x slower
+than ICI).  Int8 quantization cuts those bytes 4x; **error feedback**
+(Karimireddy et al.) accumulates the quantization residual locally and
+re-injects it next step, which restores convergence to the uncompressed
+trajectory asymptotically.
+
+Two entry points:
+
+  * ``make_error_feedback_transform`` — a ``grad_transform`` hook for
+    the optimizer (models the compress->reduce->decompress round trip;
+    usable on any device count);
+  * ``compressed_psum`` — the shard_map collective itself: quantize,
+    ``all_gather`` int8 + scales over the DP axis, dequantize and mean.
+    4x fewer bytes on the wire than an f32 all-reduce ring.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), params)
+
+
+def make_error_feedback_transform():
+    """Returns f(grads, ef) -> (compressed_grads, new_ef).
+
+    compressed = dequant(quant(g + ef));  new_ef = (g + ef) - compressed.
+    """
+    def f(grads: PyTree, ef: PyTree) -> Tuple[PyTree, PyTree]:
+        def per_leaf(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = quantize_int8(corrected)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), corrected - deq
+        out = jax.tree.map(per_leaf, grads, ef)
+        comp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        new_ef = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return comp, new_ef
+    return f
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean-reduce over a shard_map axis with int8 wire format.
+
+    all_gather(int8) + local dequant-mean: N*n int8 bytes per link vs
+    2*(N-1)/N*n f32 for a ring all-reduce -> ~4x collective-byte saving
+    on the inter-pod hop at the cost of N-way gather fan-in (acceptable:
+    the pod axis is small, N=2..8, while n is huge).
+    """
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)            # (N, ...)
+    scales = jax.lax.all_gather(scale, axis_name)    # (N,)
+    deq = qs.astype(jnp.float32) * scales.reshape(
+        (-1,) + (1,) * (qs.ndim - 1))
+    return jnp.mean(deq, axis=0)
+
+
+def compressed_psum_tree(grads: PyTree, axis_name: str) -> PyTree:
+    return jax.tree.map(lambda g: compressed_psum(g, axis_name).astype(
+        g.dtype), grads)

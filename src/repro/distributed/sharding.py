@@ -1,0 +1,264 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code never mentions mesh axes.  It annotates activations with *logical*
+names (``constrain(x, "batch", "seq", "embed")``) and parameters are
+classified by leaf path into logical axes.  A :class:`ShardingRules` mapping
+resolves logical names to physical mesh axes; unresolvable or non-divisible
+axes silently fall back to replication so that *every* (arch x mesh) cell
+compiles — the hillclimb then tightens rules per cell.
+
+Outside of an active ``use_rules`` context every annotation is a no-op, so
+the same model code runs on a single CPU device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+Axes = Union[None, str, Tuple[str, ...]]
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None)
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of axes, or None)."""
+    mapping: Dict[str, Axes]
+
+    def resolve(self, name: Optional[str]) -> Axes:
+        if name is None:
+            return None
+        return self.mapping.get(name, None)
+
+
+def serve_rules(*, multi_pod: bool = False) -> ShardingRules:
+    """Serving: weights TP over `model`, replicated over data; batch DP."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules({
+        # activations
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,
+        "ff": "model",
+        "vocab": "model",
+        "expert_act": "model",
+        # decode KV cache: sequence-sharded over `model` (split-K decode)
+        "kv_seq": "model",
+        # params
+        "fsdp": None,
+        "tensor": "model",
+        "tensor_alt": None,
+        "expert": "model",
+        "vocab_p": "model",
+    })
+
+
+def train_rules(*, multi_pod: bool = False) -> ShardingRules:
+    """Training: TP over `model` + FSDP/DP over (`pod`,)`data`."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    r = serve_rules(multi_pod=multi_pod)
+    r.mapping.update({
+        "batch": dp,
+        "fsdp": dp,
+    })
+    return r
+
+
+# ---------------------------------------------------------------------------
+# context
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: ShardingRules):
+    token = _ACTIVE.set((mesh, rules))
+    try:
+        with mesh:
+            yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_context() -> Optional[Tuple[Mesh, ShardingRules]]:
+    return _ACTIVE.get()
+
+
+def _axis_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _guarded_spec(mesh: Mesh, rules: ShardingRules, shape: Sequence[int],
+                  logical: Sequence[Optional[str]]) -> P:
+    """Resolve logical names to a PartitionSpec; drop any axis that does not
+    divide its dimension or reuses an already-assigned mesh axis."""
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axes = rules.resolve(name)
+        if axes is None:
+            out.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        # drop mesh axes already used by an earlier dim
+        tup = tuple(a for a in tup if a not in used and a in mesh.shape)
+        size = 1
+        for a in tup:
+            size *= mesh.shape[a]
+        if not tup or size <= 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(tup)
+        out.append(tup[0] if len(tup) == 1 else tup)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axis names (no-op w/o context)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical) != x.ndim:
+        # padded/squeezed intermediate; skip rather than crash
+        return x
+    spec = _guarded_spec(mesh, rules, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter classification
+# ---------------------------------------------------------------------------
+
+# leaf-name -> logical axes for the *trailing* dims (leading stacked `L`
+# dims are padded with None automatically).
+_PARAM_TABLE: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "tok": ("vocab_p", "fsdp"),
+    "pos": (None, "fsdp"),
+    "head.w": ("fsdp", "vocab_p"),
+    # attention
+    "wq": ("fsdp", "tensor", None),
+    "wk": ("fsdp", "tensor", None),
+    "wv": ("fsdp", "tensor", None),
+    "wo": ("tensor", None, "fsdp"),
+    # mlp
+    "wg": ("fsdp", "tensor"),
+    "wu": ("fsdp", "tensor"),
+    "wd": ("tensor", "fsdp"),
+    # moe
+    "router": ("fsdp", None),
+    "moe.wg": ("expert", "fsdp", "tensor"),
+    "moe.wu": ("expert", "fsdp", "tensor"),
+    "moe.wd": ("expert", "tensor", "fsdp"),
+    # mamba-2 ssd
+    "in_proj": ("fsdp", "tensor"),
+    "out_proj": ("tensor", "fsdp"),
+    "conv": (None, "tensor"),
+    "a_log": (None,),
+    "d_skip": (None,),
+    "dt_bias": (None,),
+    "ssd_norm": ("tensor",),
+    # rg-lru
+    "wx": ("fsdp", "tensor"),
+    "wa": ("fsdp", "tensor"),
+    "wy": ("tensor", "fsdp"),
+    "lam": (None,),
+    "gate_bias": (None,),
+    # norms / misc
+    "scale": (None,),
+    "bias": (None,),
+    # vision
+    "kernel": (None, None, None, "tensor"),
+    "w": ("fsdp", "tensor"),
+}
+
+
+def _leaf_logical(path: Tuple[Any, ...], shape: Tuple[int, ...]
+                  ) -> Tuple[Optional[str], ...]:
+    keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    name = keys[-1] if keys else ""
+    parent = keys[-2] if len(keys) >= 2 else ""
+    lookup = None
+    if f"{parent}.{name}" in _PARAM_TABLE:
+        lookup = _PARAM_TABLE[f"{parent}.{name}"]
+    elif parent == "experts" and f"moe.{name}" in _PARAM_TABLE:
+        lookup = _PARAM_TABLE[f"moe.{name}"]
+    elif name in _PARAM_TABLE:
+        lookup = _PARAM_TABLE[name]
+    if lookup is None:
+        lookup = (None,) * len(shape)
+    # pad leading stacked dims (scan-stacked layer axis etc.)
+    if len(lookup) < len(shape):
+        lookup = (None,) * (len(shape) - len(lookup)) + tuple(lookup)
+    elif len(lookup) > len(shape):
+        lookup = tuple(lookup[-len(shape):])
+    return tuple(lookup)
+
+
+def param_specs(abstract_params: PyTree, mesh: Mesh,
+                rules: ShardingRules) -> PyTree:
+    """NamedSharding tree matching the (abstract) parameter tree."""
+    def f(path, leaf):
+        logical = _leaf_logical(path, leaf.shape)
+        spec = _guarded_spec(mesh, rules, leaf.shape, logical)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, abstract_params)
+
+
+def cache_specs(abstract_cache: PyTree, mesh: Mesh,
+                rules: ShardingRules) -> PyTree:
+    """KV/recurrent-state cache sharding: (L, B, S, K, dh) — batch over DP,
+    cache sequence over `kv_seq` (split-K decode); state tensors batch-only."""
+    def f(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 5:      # (L, B, K, S, dh) attn cache (kv-major)
+            logical = (None, "batch", "kv_heads", "kv_seq", None)
+        elif len(shape) == 4:    # (L, B, nh, ...) ssd state / conv state
+            logical = (None, "batch", "tensor", None)
+        elif len(shape) == 3:    # (L, B, width) rg-lru state
+            logical = (None, "batch", "tensor")
+        elif len(shape) == 2:    # (B,) aux / (L,B)
+            logical = (None, "batch")
+        elif len(shape) == 1:
+            logical = ("batch",)
+        else:
+            logical = (None,) * len(shape)
+        spec = _guarded_spec(mesh, rules, shape, logical)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, abstract_cache)
+
+
+def batch_specs(abstract_batch: PyTree, mesh: Mesh,
+                rules: ShardingRules) -> PyTree:
+    """Input batches: leading dim is global batch -> DP axes."""
+    def f(leaf):
+        logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        spec = _guarded_spec(mesh, rules, leaf.shape, logical)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(f, abstract_batch)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots, with pure-jnp oracles.
+
+  flash_attention   prefill/training attention (causal/SWA/GQA)
+  decode_attention  split-K single-token decode over (ring) KV caches
+  ssd_scan          Mamba-2 chunked state-space duality
+  rglru_scan        Griffin RG-LRU linear recurrence
+  weight_transform  fused dequant/cast — the paper's weight-application
+                    compute phase as a TPU kernel
+
+Use :mod:`repro.kernels.ops` (dispatching) in model code.
+"""

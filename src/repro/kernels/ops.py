@@ -1,0 +1,295 @@
+"""Kernel dispatch layer.
+
+Every op has three implementations:
+
+  * **pallas**   — the TPU kernel (``<name>.py``), the deployment target;
+  * **interpret**— the same kernel body executed in interpret mode (CPU
+                   correctness validation; enabled in kernel tests via
+                   ``REPRO_PALLAS=interpret``);
+  * **xla**      — a memory-efficient pure-jnp fallback with identical
+                   semantics.  This is what the CPU dry-run lowers (the
+                   roofline math — FLOPs, bytes, collectives — is the
+                   same), and what tests use as the "efficient oracle".
+
+Dispatch: ``REPRO_PALLAS`` env var ∈ {auto (default), pallas, interpret,
+xla}.  ``auto`` → pallas on TPU backends, xla elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+from repro.kernels.weight_transform import weight_transform as _wt_pallas
+
+NEG_INF = -1e30
+
+
+def _mode() -> str:
+    m = os.environ.get("REPRO_PALLAS", "auto")
+    if m == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return m
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _xla_flash(q, k, v, *, causal: bool, window: int, bk: int = 1024):
+    """Blocked online-softmax attention in pure jnp — O(S·bk) memory,
+    identical math to the Pallas kernel.
+
+    The KV-block loop is a *Python* loop (nk <= ~32 for every assigned
+    cell): the lowered HLO contains no while op, so the dry-run's
+    ``cost_analysis`` is exact.  Blocks that are fully masked out
+    (above the causal diagonal / outside the sliding window) are
+    skipped at trace time — matching the Pallas kernel's ``pl.when``
+    pruning, so HLO FLOPs reflect the real kernel's work."""
+    B, H, S, dh = q.shape
+    K, T = k.shape[1], k.shape[2]
+    rep = H // K
+    bk = min(bk, T)
+    if T % bk:
+        pad = (-T) % bk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Tp = T + pad
+    else:
+        Tp = T
+    nk = Tp // bk
+    q_offset = T - S
+
+    # dots consume q/k/v in their stored dtype with f32 accumulation
+    # (MXU semantics) — no materialized f32 copies of the slabs
+    scale = 1.0 / float(dh) ** 0.5
+    qr = q.reshape(B, K, rep, S, dh)
+    qpos = q_offset + jnp.arange(S)
+
+    m = jnp.full((B, K, rep, S), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, K, rep, S), jnp.float32)
+    acc = jnp.zeros((B, K, rep, S, dh), jnp.float32)
+
+    for ki in range(nk):
+        k_lo = ki * bk
+        # trace-time block pruning (mirrors pl.when in the kernel)
+        if causal and k_lo > q_offset + S - 1:
+            continue
+        if causal and window > 0 and k_lo + bk - 1 <= q_offset - window:
+            continue
+        ks = k[:, :, k_lo:k_lo + bk]
+        vs = v[:, :, k_lo:k_lo + bk]
+        s = jnp.einsum("bkrsd,bktd->bkrst", qr, ks,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jnp.arange(bk)
+        mask = (kpos[None, :] < T)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window > 0:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        elif window > 0:
+            mask = mask & (jnp.abs(kpos[None, :] - qpos[:, None]) < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkrst,bktd->bkrsd", p.astype(v.dtype), vs,
+            preferred_element_type=jnp.float32)
+        m = m_new
+
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(B, H, S, dh)
+    return out.astype(q.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, S, H, dh); k, v: (B, T, K, dh) — model layout (seq-major).
+    Returns (B, S, H, dh)."""
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    return flash_attention_kvmajor(q, kt, vt, causal=causal, window=window)
+
+
+def flash_attention_kvmajor(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True, window: int = 0
+                            ) -> jax.Array:
+    """q: (B, S, H, dh); k, v: (B, K, T, dh) — cache layout (kv-major;
+    chunked prefill attends directly against cache slices, no transpose).
+    Returns (B, S, H, dh)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    mode = _mode()
+    if mode == "pallas":
+        o = _flash_pallas(qt, k, v, causal=causal, window=window)
+    elif mode == "interpret":
+        o = _flash_pallas(qt, k, v, causal=causal, window=window,
+                          interpret=True)
+    else:
+        o = _xla_flash(qt, k, v, causal=causal, window=window)
+    return jnp.swapaxes(o, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """q: (B, H, dh); caches: (B, S_max, K, dh); pos: (B,). -> (B, H, dh)."""
+    mode = _mode()
+    if mode == "pallas":
+        return _decode_pallas(q, k_cache, v_cache, pos, window=window)
+    if mode == "interpret":
+        return _decode_pallas(q, k_cache, v_cache, pos, window=window,
+                              interpret=True)
+    return ref.decode_attention(q, k_cache, v_cache, pos, window=window)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+def _xla_ssd(x, dt, A, B, C, *, bc: int = 128):
+    """Chunked SSD in pure jnp — same decomposition as the kernel.
+
+    The inter-chunk state pass is a *Python* loop (nc <= 128 for every
+    assigned cell), so the lowered HLO has no while op and the dry-run's
+    ``cost_analysis`` is exact."""
+    b, nh, S, dp = x.shape
+    N = B.shape[-1]
+    bc = min(bc, S)
+    assert S % bc == 0
+    nc = S // bc
+
+    xf = x.astype(jnp.float32).reshape(b, nh, nc, bc, dp)
+    dtf = dt.astype(jnp.float32).reshape(b, nh, nc, bc)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32).reshape(b, nc, bc, N)
+    Cf = C.astype(jnp.float32).reshape(b, nc, bc, N)
+
+    da = dtf * Af[None, :, None, None]                    # (b, nh, nc, bc)
+    cum = jnp.cumsum(da, axis=-1)
+    li = jnp.arange(bc)[:, None]
+    lj = jnp.arange(bc)[None, :]
+    diff = cum[..., :, None] - cum[..., None, :]
+    L = jnp.where(li >= lj, jnp.exp(diff), 0.0)           # (b,nh,nc,bc,bc)
+
+    xd = xf * dtf[..., None]
+    cb = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)            # (b, nc, bc, bc)
+    y_intra = jnp.einsum("bhcij,bhcjp->bhcip", cb[:, None] * L, xd)
+
+    # inter-chunk states, sequential over chunks
+    total = jnp.exp(cum[..., -1])                         # (b, nh, nc)
+    rem = jnp.exp(cum[..., -1:] - cum)                    # (b, nh, nc, bc)
+    upd = jnp.einsum("bhcj,bhcjp,bcjn->bhcpn", rem, xd, Bf)
+
+    h = jnp.zeros((b, nh, dp, N), jnp.float32)
+    y_inters = []
+    for c in range(nc):
+        c_dec = Cf[:, c][:, None] * jnp.exp(cum[:, :, c, :, None])
+        y_inters.append(jnp.einsum("bhin,bhpn->bhip", c_dec, h))
+        h = h * total[:, :, c, None, None] + upd[:, :, c]
+    y_inter = jnp.stack(y_inters, axis=2)                 # (b, nh, nc, bc, dp)
+    y = (y_intra + y_inter).reshape(b, nh, S, dp)
+    return y.astype(x.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, bc: int = 128):
+    """Shapes as in ref.ssd.  Returns y (b, nh, S, dp).
+
+    S is padded up to a multiple of the chunk size with dt = 0 steps
+    (decay exp(0·A) = 1, zero input -> state unaffected); the padded
+    outputs are sliced off."""
+    S = x.shape[2]
+    bc = min(bc, S)
+    pad = (-S) % bc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    mode = _mode()
+    if mode == "pallas":
+        y = _ssd_pallas(x, dt, A, B, C, bc=bc)
+    elif mode == "interpret":
+        y = _ssd_pallas(x, dt, A, B, C, bc=bc, interpret=True)
+    else:
+        y = _xla_ssd(x, dt, A, B, C, bc=bc)
+    return y[:, :, :S] if pad else y
+
+
+def ssd_step(h, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD recurrence for decode.
+    h (b,nh,dp,N); x_t (b,nh,dp); dt_t (b,nh); A (nh,); B_t/C_t (b,N).
+    Returns (h_new, y_t (b,nh,dp))."""
+    hf = h.astype(jnp.float32)
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None])
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32), B_t.astype(jnp.float32))
+    h_new = hf * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C_t.astype(jnp.float32))
+    return h_new.astype(h.dtype), y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _xla_rglru(a, b):
+    """Associative scan over the time axis — O(log S) depth, the natural
+    XLA lowering of a first-order linear recurrence."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    aa, bb = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return bb.astype(a.dtype)
+
+
+def rglru_scan(a, b, *, bc: int = 256):
+    """a, b: (B, S, W) -> h at every step (B, S, W)."""
+    mode = _mode()
+    if mode == "xla":
+        return _xla_rglru(a, b)
+    S = a.shape[1]
+    bc = min(bc, S)
+    pad = (-S) % bc
+    if pad:                      # trailing pad only: earlier steps unaffected
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    y = _rglru_pallas(a, b, bc=bc, interpret=(mode == "interpret"))
+    return y[:, :S] if pad else y
+
+
+def rglru_step(h, a_t, b_t):
+    """h, a_t, b_t: (B, W) -> h_new."""
+    return (a_t.astype(jnp.float32) * h.astype(jnp.float32)
+            + b_t.astype(jnp.float32)).astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# weight transform
+# ---------------------------------------------------------------------------
+
+def weight_transform(w, scale=None, *, out_dtype=jnp.bfloat16):
+    """Dequant (int8 + per-col scale) or cast an (n, m) weight extent."""
+    mode = _mode()
+    if mode == "pallas":
+        return _wt_pallas(w, scale, out_dtype=out_dtype)
+    if mode == "interpret":
+        return _wt_pallas(w, scale, out_dtype=out_dtype, interpret=True)
+    return ref.weight_transform(w, scale, out_dtype)

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run forces 512 host devices *before*
+any jax initialization; everything else sees the real topology).
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the `pod` axis is
+the DCN dimension (gradient reduce / FSDP outer axis), `model` stays
+inside the ICI domain.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Whatever this process actually has (tests / smoke runs)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,106 @@
+"""Serving launcher: trace-driven serverless inference with Cicada.
+
+``python -m repro.launch.serve --strategy cicada --models smollm-360m``
+
+Deploys the requested models to a local weight store (with a simulated
+storage device so the I/O phase is visible), generates an Azure-like
+invocation trace, replays it through the ServerlessPlatform and prints
+per-strategy latency / utilization statistics.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.api import get_config
+from repro.serving.engine import ServerlessPlatform
+from repro.serving.trace import azure_like_trace, summarize
+from repro.store.store import BandwidthModel, WeightStore, deploy_model
+
+
+def example_batch(cfg, seq: int = 32):
+    rng = np.random.default_rng(0)
+    if cfg.family.value == "vision":
+        return {"image": jnp.asarray(
+            rng.standard_normal((1, 3, cfg.img_res, cfg.img_res)),
+            jnp.float32)}
+    if cfg.family.value == "audio":
+        return {"frames": jnp.asarray(
+            rng.standard_normal((1, seq, cfg.frontend_dim)),
+            jnp.bfloat16)}
+    if cfg.family.value == "vlm":
+        n_img = min(8, seq // 2)
+        return {"tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (1, seq - n_img)),
+                    jnp.int32),
+                "img": jnp.asarray(
+                    rng.standard_normal((1, n_img, cfg.frontend_dim)),
+                    jnp.bfloat16)}
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (1, seq)), jnp.int32)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="+", default=["smollm-360m"])
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--strategy", default="cicada",
+                    choices=["traditional", "pisel", "mini", "preload",
+                             "cicada"])
+    ap.add_argument("--invocations", type=int, default=40)
+    ap.add_argument("--duration", type=float, default=600.0)
+    ap.add_argument("--keep-alive", type=float, default=30.0)
+    ap.add_argument("--bandwidth-mbps", type=float, default=400.0)
+    ap.add_argument("--store", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    store_dir = args.store or tempfile.mkdtemp(prefix="cicada-store-")
+    store = WeightStore(store_dir, BandwidthModel(args.bandwidth_mbps, 0.2))
+
+    builders = {}
+    for name in args.models:
+        cfg = get_config(name, smoke=args.smoke)
+        model = transformer.build(cfg)
+        if not store.has_model(name):
+            print(f"deploying {name} "
+                  f"({cfg.param_count() / 1e6:.1f}M params) ...")
+            deploy_model(store, model, name, jax.random.key(args.seed))
+        builders[name] = (lambda m=model, c=cfg:
+                          (m, example_batch(c)))
+
+    trace = azure_like_trace(duration_s=args.duration,
+                             n_invocations=args.invocations,
+                             models=args.models, seed=args.seed)
+    print("trace:", summarize(trace))
+
+    platform = ServerlessPlatform(store, builders, strategy=args.strategy,
+                                  keep_alive_s=args.keep_alive)
+
+    def make_batch(name):
+        return example_batch(get_config(name, smoke=args.smoke))
+
+    responses = platform.run_trace(trace, make_batch)
+    lat = np.array([r.latency_s for r in responses])
+    cold = np.array([r.cold for r in responses])
+    print(f"strategy={args.strategy}  n={len(responses)}  "
+          f"cold={cold.sum()} ({cold.mean():.0%})")
+    print(f"latency: mean={lat.mean() * 1e3:.1f}ms "
+          f"p50={np.percentile(lat, 50) * 1e3:.1f}ms "
+          f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
+    if cold.any():
+        cl = lat[cold]
+        ut = np.array([r.utilization for r in responses])[cold]
+        print(f"cold-start: mean={cl.mean() * 1e3:.1f}ms "
+              f"pipeline-util={ut.mean():.1%}")
+    return responses
+
+
+if __name__ == "__main__":
+    main()

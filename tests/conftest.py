@@ -1,0 +1,44 @@
+import os
+
+# Tests run single-device (the dry-run subprocess sets its own 512).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_batch(cfg, B=2, S=24, seed=1, labels=False):
+    """Family-appropriate random inputs for a config."""
+    import jax.numpy as jnp
+    r = np.random.default_rng(seed)
+    fam = cfg.family.value
+    if fam == "vision":
+        b = {"image": jnp.asarray(
+            r.standard_normal((B, 3, cfg.img_res, cfg.img_res)),
+            jnp.float32)}
+    elif fam == "audio":
+        b = {"frames": jnp.asarray(
+            r.standard_normal((B, S, cfg.frontend_dim)), jnp.bfloat16)}
+    elif fam == "vlm":
+        n_img = min(8, S // 2)
+        b = {"tokens": jnp.asarray(
+                 r.integers(0, cfg.vocab_size, (B, S - n_img)), jnp.int32),
+             "img": jnp.asarray(
+                 r.standard_normal((B, n_img, cfg.frontend_dim)),
+                 jnp.bfloat16)}
+    else:
+        b = {"tokens": jnp.asarray(
+            r.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if labels and fam != "vision":
+        b["labels"] = jnp.asarray(
+            r.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    return b

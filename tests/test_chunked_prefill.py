@@ -1,0 +1,70 @@
+"""Chunked prefill (§Perf iteration C1) == unchunked prefill, exactly."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import transformer
+from repro.models.api import get_config
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "arctic-480b", "internvl2-76b"])
+def test_chunked_matches_unchunked(arch):
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              compute_dtype=jnp.float32, sliding_window=0)
+    m = transformer.LM(cfg)
+    params = m.init(jax.random.key(0))
+    r = np.random.default_rng(1)
+    B, S = 2, 32
+    if cfg.family.value == "vlm":
+        n_img = 8
+        batch = {"tokens": jnp.asarray(
+                     r.integers(0, cfg.vocab_size, (B, S - n_img)),
+                     jnp.int32),
+                 "img": jnp.asarray(
+                     r.standard_normal((B, n_img, cfg.frontend_dim)),
+                     jnp.float32)}
+    else:
+        batch = {"tokens": jnp.asarray(
+            r.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    lg1, c1 = m.prefill(params, batch, m.init_cache(B, S))
+    lg2, c2 = m.prefill_chunked(params, batch, m.init_cache(B, S), chunk=8)
+    np.testing.assert_allclose(np.asarray(lg1[:, -1], np.float32),
+                               np.asarray(lg2[:, -1], np.float32),
+                               atol=2e-4, rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-4, rtol=1e-3)
+
+
+def test_chunked_then_decode():
+    """Cache built by chunked prefill supports exact decode."""
+    cfg = dataclasses.replace(get_config("yi-9b", smoke=True),
+                              compute_dtype=jnp.float32)
+    m = transformer.LM(cfg)
+    params = m.init(jax.random.key(0))
+    r = np.random.default_rng(2)
+    B, S, Sp = 2, 24, 16
+    toks = jnp.asarray(r.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = m.forward(params, {"tokens": toks})
+    cache = m.init_cache(B, 32)
+    lg, cache = m.prefill_chunked(params, {"tokens": toks[:, :Sp]}, cache,
+                                  chunk=8)
+    for t in range(Sp, S):
+        lg, cache = m.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.full((B,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_chunked_rejects_unsupported():
+    cfg = get_config("mamba2-780m", smoke=True)
+    m = transformer.LM(cfg)
+    with pytest.raises(AssertionError):
+        m.prefill_chunked(m.init(jax.random.key(0)),
+                          {"tokens": jnp.zeros((1, 16), jnp.int32)},
+                          m.init_cache(1, 16), chunk=8)

@@ -1,0 +1,153 @@
+"""ColdStartEngine end-to-end: all five strategies produce exactly the
+deployed model's logits, pipeline event-ordering invariants hold, and
+the paper's qualitative claims reproduce under a throttled store."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ColdStartEngine, get_strategy
+from repro.models import transformer
+from repro.models.api import get_config
+from repro.store.store import (BandwidthModel, WeightStore, deploy_model,
+                               unflatten_unit)
+
+STRATS = ["traditional", "pisel", "mini", "preload", "cicada"]
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    d = tmp_path_factory.mktemp("store")
+    cfg = get_config("smollm-360m", smoke=True)
+    m = transformer.build(cfg)
+    store = WeightStore(str(d), BandwidthModel(bandwidth_mbps=120,
+                                               latency_ms=0.3))
+    deploy_model(store, m, "m", jax.random.key(7))
+    # reference logits from the deployed weights
+    units = {}
+    for u in m.unit_names():
+        leaves = store.read_and_deserialize("m", u)
+        units[u] = unflatten_unit(m.abstract_unit(u),
+                                  {k: v for k, (v, _) in leaves.items()})
+    params = m.assemble(units)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 16)),
+        jnp.int32)}
+    ref_logits, _ = m.forward(params, batch)
+    return store, m, cfg, batch, np.asarray(ref_logits, np.float32)
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_strategy_correctness(setup, strategy):
+    store, m, cfg, batch, ref = setup
+    eng = ColdStartEngine(m, "m", store, strategy=strategy,
+                          chunk_bytes=1 << 15)
+    eng.warmup(batch)
+    res = eng.load(batch)
+    got = np.asarray(res.logits, np.float32)
+    np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+    # assembled params serve warm requests identically
+    warm, _ = m.forward(res.params, batch)
+    np.testing.assert_allclose(np.asarray(warm, np.float32), ref,
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_event_ordering_invariants(setup, strategy):
+    store, m, cfg, batch, ref = setup
+    eng = ColdStartEngine(m, "m", store, strategy=strategy,
+                          chunk_bytes=1 << 15)
+    eng.warmup(batch)
+    tr = eng.load(batch).trace
+    L = tr.events_for("L")
+    A = tr.events_for("A")
+    E = tr.events_for("E")
+    R = tr.events_for("R")
+    units = m.unit_names()
+    assert set(L) == set(A) == set(E) == set(units)
+    strat = get_strategy(strategy)
+    for u in units:
+        # A_i cannot finish before its structure exists
+        assert A[u].t_end >= L[u].t_end - 1e-6
+        # E_i strictly after its weights are applied
+        assert E[u].t_start >= A[u].t_end - 1e-6
+    # E is sequential in layer order
+    ee = [E[u] for u in units]
+    for a, b in zip(ee, ee[1:]):
+        assert b.t_start >= a.t_end - 1e-6
+    assert set(R) == set(units)
+    for u in units:
+        # retrieval always completes before its application completes
+        assert R[u].t_end <= A[u].t_end + 1e-6
+    if strat.decouple:
+        # async retrieval was issued at request arrival: the earliest
+        # stream starts before the last construction finishes
+        assert min(r.t_start for r in R.values()) < \
+            max(l.t_end for l in L.values()) + 1e-6
+    else:
+        # fused: retrieval cannot begin until the layer is constructed
+        for u in units:
+            assert R[u].t_start >= L[u].t_end - 1e-6
+    if not strat.pipelined:
+        # traditional: phases do not interleave
+        assert max(e.t_end for e in L.values()) <= \
+            min(a.t_start for a in A.values()) + 1e-6
+        assert max(a.t_end for a in A.values()) <= \
+            min(e.t_start for e in E.values()) + 1e-6
+
+
+def test_paper_qualitative_claims(setup):
+    store, m, cfg, batch, ref = setup
+    res = {}
+    for s in STRATS:
+        eng = ColdStartEngine(m, "m", store, strategy=s,
+                              chunk_bytes=1 << 15)
+        eng.warmup(batch)
+        res[s] = eng.load(batch).trace.summary()
+    # MiniLoader cuts construction work (paper: >50% on real models)
+    assert res["mini"]["work_L"] < res["pisel"]["work_L"]
+    assert res["cicada"]["work_L"] < res["preload"]["work_L"]
+    # placeholder memory: 1-bit vs fp32 is exactly 1/32 per layer (paper
+    # Fig. 10); compare totals (peak depends on pipeline dynamics — mini
+    # constructs faster so more placeholders coexist)
+    tr_mini = ColdStartEngine(m, "m", store, strategy="mini",
+                              chunk_bytes=1 << 15)
+    tr_mini.warmup(batch)
+    t_mini = tr_mini.load(batch).trace
+    tr_pisel = ColdStartEngine(m, "m", store, strategy="pisel",
+                               chunk_bytes=1 << 15)
+    tr_pisel.warmup(batch)
+    t_pisel = tr_pisel.load(batch).trace
+    ratio = t_pisel.memory_total_bytes() / t_mini.memory_total_bytes()
+    assert 24 < ratio <= 32.5, ratio
+    # Cicada beats PISeL end-to-end
+    assert res["cicada"]["total_s"] < res["pisel"]["total_s"]
+    # the decoupler's utilization mechanism (paper Fig. 12) shows in
+    # Preload, where construction still covers the I/O window; under
+    # Mini/Cicada our JAX MiniLoader removes construction entirely, so
+    # the pipeline is I/O-bound and CPU-busy utilization legitimately
+    # drops while E2E improves (EXPERIMENTS.md §Reproduction note A)
+    assert res["preload"]["utilization"] > res["pisel"]["utilization"]
+
+
+def test_int8_deployment_pipeline(tmp_path):
+    """Cold start from an int8 store: dequant happens at application."""
+    cfg = get_config("smollm-360m", smoke=True)
+    m = transformer.build(cfg)
+    store = WeightStore(str(tmp_path))
+    deploy_model(store, m, "q", jax.random.key(9), quant="int8")
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 8)),
+        jnp.int32)}
+    eng = ColdStartEngine(m, "q", store, strategy="cicada")
+    eng.warmup(batch)
+    res = eng.load(batch)
+    # logits close to the f32 deployment (quantization-level tolerance)
+    store2 = WeightStore(str(tmp_path))
+    deploy_model(store2, m, "f", jax.random.key(9))
+    eng2 = ColdStartEngine(m, "f", store2, strategy="cicada")
+    eng2.warmup(batch)
+    ref = eng2.load(batch)
+    a = np.asarray(res.logits, np.float32)
+    b = np.asarray(ref.logits, np.float32)
+    assert np.abs(a - b).max() < 0.15 * max(np.abs(b).max(), 1.0)

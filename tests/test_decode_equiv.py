@@ -1,0 +1,109 @@
+"""Prefill + decode == full forward, per family (f32 for exactness).
+
+This is the serving engine's core correctness property: the KV caches
+(full + ring-buffered SWA), SSD states, RG-LRU states and conv states
+all have to carry exactly the same information as a fresh full-sequence
+forward.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import transformer
+from repro.models.api import get_config
+
+FAMS = ["yi-9b",               # dense full attention
+        "h2o-danube-3-4b",     # dense + SWA ring cache
+        "smollm-360m",         # odd head counts
+        "mixtral-8x7b",        # MoE (+SWA)
+        "arctic-480b",         # MoE + dense residual
+        "recurrentgemma-2b",   # hybrid pattern + tail + tied embeddings
+        "mamba2-780m"]         # SSM
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              compute_dtype=jnp.float32)
+    m = transformer.build(cfg)
+    params = m.init(jax.random.key(0))
+    r = np.random.default_rng(1)
+    B, S, Sp = 2, 24, 16
+    toks = jnp.asarray(r.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = m.forward(params, {"tokens": toks})
+
+    cache = m.init_cache(B, 64)
+    lg, cache = m.prefill(params, {"tokens": toks[:, :Sp]}, cache)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(full[:, Sp - 1]),
+                               atol=1e-4, rtol=1e-3)
+    for t in range(Sp, S):
+        lg, cache = m.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.full((B,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_swa_ring_cache_wraps():
+    """Decode far past the window: ring cache must stay exact."""
+    cfg = dataclasses.replace(get_config("h2o-danube-3-4b", smoke=True),
+                              compute_dtype=jnp.float32)
+    assert cfg.sliding_window == 16
+    m = transformer.build(cfg)
+    params = m.init(jax.random.key(0))
+    r = np.random.default_rng(2)
+    B, S = 1, 48                        # 3x the window
+    toks = jnp.asarray(r.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full, _ = m.forward(params, {"tokens": toks})
+    cache = m.init_cache(B, 64)         # ring: min(64, window=16) slots
+    lg, cache = m.prefill(params, {"tokens": toks[:, :8]}, cache)
+    for t in range(8, S):
+        lg, cache = m.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, -1]),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_unrolled_forward_matches_scan():
+    """The roofline lowering (unroll=True) is numerically identical."""
+    for arch in ["yi-9b", "recurrentgemma-2b", "mamba2-780m"]:
+        cfg = dataclasses.replace(get_config(arch, smoke=True),
+                                  compute_dtype=jnp.float32)
+        m = transformer.build(cfg)
+        params = m.init(jax.random.key(0))
+        r = np.random.default_rng(3)
+        toks = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+        a, _ = m.forward(params, {"tokens": toks})
+        b, _ = m.forward(params, {"tokens": toks}, unroll=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_encoder_has_no_decode_units():
+    cfg = get_config("hubert-xlarge", smoke=True)
+    assert cfg.is_encoder
+    from repro.configs import SHAPES, supported
+    ok, reason = supported(cfg, SHAPES["decode_32k"])
+    assert not ok and "encoder" in reason
+    ok, _ = supported(cfg, SHAPES["prefill_32k"])
+    assert ok
+
+
+def test_long500k_applicability():
+    from repro.configs import SHAPES, supported
+    cell = SHAPES["long_500k"]
+    runs = {a: supported(get_config(a), cell)[0] for a in
+            ["yi-9b", "codeqwen1.5-7b", "smollm-360m", "internvl2-76b",
+             "arctic-480b", "hubert-xlarge",
+             "h2o-danube-3-4b", "mixtral-8x7b", "recurrentgemma-2b",
+             "mamba2-780m"]}
+    assert not any(runs[a] for a in ["yi-9b", "codeqwen1.5-7b",
+                                     "smollm-360m", "internvl2-76b",
+                                     "arctic-480b", "hubert-xlarge"])
+    assert all(runs[a] for a in ["h2o-danube-3-4b", "mixtral-8x7b",
+                                 "recurrentgemma-2b", "mamba2-780m"])

@@ -1,0 +1,229 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes, plus the XLA fallbacks against the same
+oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention as decode_pallas
+from repro.kernels.flash_attention import flash_attention as flash_pallas
+from repro.kernels.rglru_scan import rglru_scan as rglru_pallas
+from repro.kernels.ssd_scan import ssd_scan as ssd_pallas
+from repro.kernels.weight_transform import weight_transform as wt_pallas
+
+R = np.random.default_rng(0)
+
+
+def arr(*s, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(R.standard_normal(s) * scale, dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,dh", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 2, 256, 64),     # GQA 4x
+    (1, 3, 1, 128, 32),     # MQA, odd heads
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(B, H, K, S, dh, causal, window, dtype):
+    q, k, v = arr(B, H, S, dh, dtype=dtype), arr(B, K, S, dh, dtype=dtype), \
+        arr(B, K, S, dh, dtype=dtype)
+    o_ref = ref.mha_attention(q, k, v, causal=causal, window=window)
+    o_pal = flash_pallas(q, k, v, causal=causal, window=window,
+                         bq=64, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32), **tol(dtype))
+    o_xla = ops._xla_flash(q, k, v, causal=causal, window=window, bk=64)
+    np.testing.assert_allclose(np.asarray(o_xla, np.float32),
+                               np.asarray(o_ref, np.float32), **tol(dtype))
+
+
+def test_flash_chunked_prefill():
+    """T > S: queries are the last S positions (prefix continuation)."""
+    B, H, K, S, T, dh = 1, 4, 2, 64, 192, 32
+    q = arr(B, H, S, dh)
+    k, v = arr(B, K, T, dh), arr(B, K, T, dh)
+    o_ref = ref.mha_attention(q, k, v, causal=True, window=0)
+    o_pal = flash_pallas(q, k, v, causal=True, window=0, bq=32, bk=32,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_block_shape_sweep():
+    B, H, K, S, dh = 1, 2, 2, 256, 64
+    q, k, v = arr(B, H, S, dh), arr(B, K, S, dh), arr(B, K, S, dh)
+    o_ref = ref.mha_attention(q, k, v, causal=True)
+    for bq, bk in [(32, 128), (128, 32), (256, 256), (64, 64)]:
+        o = flash_pallas(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_vs_ref(window, dtype):
+    B, H, K, dh, S = 3, 8, 2, 64, 128
+    q = arr(B, H, dh, dtype=dtype)
+    kc, vc = arr(B, K, S, dh, dtype=dtype), arr(B, K, S, dh, dtype=dtype)
+    pos = jnp.asarray([3, 100, 127], jnp.int32)
+    o_ref = ref.decode_attention(q, kc, vc, pos, window=window)
+    o_pal = decode_pallas(q, kc, vc, pos, window=window, bs=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32), **tol(dtype))
+
+
+def test_decode_matches_full_attention():
+    """Decode over a cache == last row of full causal attention."""
+    B, H, K, dh, S = 2, 4, 2, 32, 96
+    q_all = arr(B, H, S, dh)
+    k_all, v_all = arr(B, K, S, dh), arr(B, K, S, dh)
+    full = ref.mha_attention(q_all, k_all, v_all, causal=True)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    dec = ref.decode_attention(q_all[:, :, -1], k_all, v_all, pos)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_decode_ring_buffer_semantics():
+    """A full ring cache attends to exactly the last `window` positions."""
+    B, H, K, dh, W = 1, 2, 1, 16, 32
+    pos_val = 100                          # cache wrapped 3+ times
+    keys = arr(B, K, W, dh)
+    vals = arr(B, K, W, dh)
+    q = arr(B, H, dh)
+    pos = jnp.asarray([pos_val], jnp.int32)
+    out = ref.decode_attention(q, keys, vals, pos, window=W)
+    # oracle: arrange the W entries by absolute position and attend to all
+    o_pal = decode_pallas(q, keys, vals, pos, window=W, bs=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(out),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,nh,S,dp,N,bc", [
+    (1, 2, 64, 16, 32, 16),
+    (2, 3, 128, 32, 64, 64),
+    (1, 1, 96, 16, 16, 32),    # S not a multiple of 2*bc
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_vs_ref(b, nh, S, dp, N, bc, dtype):
+    x = arr(b, nh, S, dp, dtype=dtype)
+    dt = jnp.abs(arr(b, nh, S)) * 0.1 + 0.01
+    A = -jnp.abs(arr(nh)) - 0.1
+    B = arr(b, S, N, scale=0.3)
+    C = arr(b, S, N, scale=0.3)
+    y_ref = ref.ssd(x, dt, A, B, C)
+    y_pal = ssd_pallas(x, dt, A, B, C, bc=bc, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+    y_xla = ops._xla_ssd(x, dt, A, B, C, bc=bc)
+    np.testing.assert_allclose(np.asarray(y_xla, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_step_matches_scan():
+    b, nh, S, dp, N = 2, 2, 16, 8, 16
+    x = arr(b, nh, S, dp)
+    dt = jnp.abs(arr(b, nh, S)) * 0.1 + 0.01
+    A = -jnp.abs(arr(nh)) - 0.1
+    B, C = arr(b, S, N), arr(b, S, N)
+    y_ref = ref.ssd(x, dt, A, B, C)
+    h = jnp.zeros((b, nh, dp, N))
+    for t in range(S):
+        h, y = ops.ssd_step(h, x[:, :, t], dt[:, :, t], A, B[:, t], C[:, t])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref[:, :, t]),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W,bc", [(1, 64, 32, 16), (3, 128, 48, 64),
+                                      (2, 80, 16, 16)])
+def test_rglru_vs_ref(B, S, W, bc):
+    a = jnp.abs(arr(B, S, W)) * 0.2
+    b = arr(B, S, W)
+    h_ref = ref.rglru(a, b)
+    h_pal = rglru_pallas(a, b, bc=bc, interpret=True)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               atol=1e-5, rtol=1e-5)
+    h_xla = ops._xla_rglru(a, b)
+    np.testing.assert_allclose(np.asarray(h_xla), np.asarray(h_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_ops_pads_nondivisible_seq():
+    """The dispatcher pads S up to the chunk size (interpret path)."""
+    import os
+    B, S, W = 2, 80, 16                    # 80 % 256 != 0
+    a = jnp.abs(arr(B, S, W)) * 0.2
+    b = arr(B, S, W)
+    h_ref = ref.rglru(a, b)
+    os.environ["REPRO_PALLAS"] = "interpret"
+    try:
+        h = ops.rglru_scan(a, b, bc=32)
+    finally:
+        os.environ.pop("REPRO_PALLAS")
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_step_matches_scan():
+    B, S, W = 2, 12, 8
+    a = jnp.abs(arr(B, S, W)) * 0.3
+    b = arr(B, S, W)
+    h_ref = ref.rglru(a, b)
+    h = jnp.zeros((B, W))
+    for t in range(S):
+        h = ops.rglru_step(h, a[:, t], b[:, t])
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref[:, t]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# weight transform
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,bn,bm", [(64, 64, 32, 32), (100, 70, 32, 32),
+                                       (17, 300, 8, 128)])
+def test_weight_transform_dequant(n, m, bn, bm):
+    w8 = jnp.asarray(R.integers(-127, 128, (n, m)), jnp.int8)
+    sc = jnp.abs(arr(m)) * 0.01 + 1e-4
+    o_ref = ref.weight_transform(w8, sc, jnp.float32)
+    o_pal = wt_pallas(w8, sc, out_dtype=jnp.float32, bn=bn, bm=bm,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_weight_transform_cast():
+    w = arr(50, 130)
+    o = wt_pallas(w, out_dtype=jnp.bfloat16, bn=16, bm=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o),
+                                  np.asarray(w.astype(jnp.bfloat16)))

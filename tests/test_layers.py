@@ -1,0 +1,111 @@
+"""Property-based tests for the primitive layers (hypothesis)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from repro.models import layers
+
+dims = st.integers(min_value=1, max_value=8)
+
+
+@given(b=dims, s=dims, d=st.sampled_from([8, 16, 64]),
+       seed=st.integers(0, 2 ** 16))
+def test_rmsnorm_unit_rms(b, s, d, seed):
+    """With zero scale offset, the output has (close to) unit RMS."""
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((b, s, d)),
+                    jnp.float32) * 7.0 + 1.0
+    y = layers.rmsnorm(x, jnp.zeros((d,)))
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_rmsnorm_scale_invariance(seed):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive scalar c."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((2, 3, 16)), jnp.float32)
+    c = float(r.uniform(0.1, 100.0))
+    sc = jnp.asarray(r.standard_normal(16), jnp.float32)
+    y1 = layers.rmsnorm(x, sc)
+    y2 = layers.rmsnorm(c * x, sc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_layernorm_standardizes(seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((2, 5, 32)) * 3 + 5, jnp.float32)
+    y = layers.layernorm(x, jnp.ones((32,)), jnp.zeros((32,)))
+    yn = np.asarray(y)
+    np.testing.assert_allclose(yn.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(yn.std(-1), 1.0, atol=1e-2)
+
+
+@given(seed=st.integers(0, 2 ** 16),
+       dh=st.sampled_from([8, 16, 64]))
+def test_rope_preserves_norm(seed, dh):
+    """Rotations preserve vector norms."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((1, 6, 2, dh)), jnp.float32)
+    pos = jnp.asarray(r.integers(0, 1000, (1, 6)), jnp.int32)
+    y = layers.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_rope_relative_positions(seed):
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    r = np.random.default_rng(seed)
+    dh = 16
+    q = jnp.asarray(r.standard_normal((1, 1, 1, dh)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 1, 1, dh)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = layers.apply_rope(q, jnp.asarray([[i]]), 10000.0)
+        kj = layers.apply_rope(k, jnp.asarray([[j]]), 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(105, 103), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_rope_zero_position_is_identity():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 1, 2, 32)),
+                    jnp.float32)
+    y = layers.apply_rope(x, jnp.zeros((1, 1), jnp.int32), 10000.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+@given(w=st.integers(1, 4), s=st.integers(1, 12),
+       seed=st.integers(0, 2 ** 16))
+def test_causal_conv_streaming_equivalence(w, s, seed):
+    """Processing token-by-token with carried state == full-sequence."""
+    r = np.random.default_rng(seed)
+    B, C = 2, 6
+    x = jnp.asarray(r.standard_normal((B, s, C)), jnp.float32)
+    kern = jnp.asarray(r.standard_normal((w, C)), jnp.float32)
+    y_full, _ = layers.causal_conv1d(x, kern)
+    state = None
+    ys = []
+    for t in range(s):
+        y_t, state = layers.causal_conv1d(x[:, t:t + 1], kern, state)
+        ys.append(y_t)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_causal_conv_causality():
+    """Output at t must not depend on inputs after t."""
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.standard_normal((1, 10, 4)), jnp.float32)
+    kern = jnp.asarray(r.standard_normal((4, 4)), jnp.float32)
+    y1, _ = layers.causal_conv1d(x, kern)
+    x2 = x.at[:, 7:].set(99.0)
+    y2, _ = layers.causal_conv1d(x2, kern)
+    np.testing.assert_array_equal(np.asarray(y1[:, :7]),
+                                  np.asarray(y2[:, :7]))

@@ -1,0 +1,157 @@
+"""PipelineTrace math (utilization, waits, memory) + Priority-Aware
+Scheduler (Algorithm 1) unit tests."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.pipeline import PipelineTrace
+from repro.core.scheduler import HIGH, NORMAL, PriorityAwareScheduler
+
+
+# ---------------------------------------------------------------------------
+# trace math
+# ---------------------------------------------------------------------------
+
+def _trace(events, t0=0.0, t1=None):
+    tr = PipelineTrace()
+    tr.t0 = t0
+    for stage, layer, a, b in events:
+        tr.add_event(stage, layer, a, b)
+    tr.t_end = t1 if t1 is not None else max(e[3] for e in events)
+    return tr
+
+
+def test_utilization_no_overlap():
+    tr = _trace([("L", "u0", 0.0, 1.0), ("A", "u0", 1.0, 2.0),
+                 ("E", "u0", 2.0, 3.0)])
+    assert tr.total_time() == 3.0
+    assert tr.busy_time() == 3.0
+    assert tr.utilization() == 1.0
+
+
+def test_utilization_counts_overlap_once():
+    tr = _trace([("L", "u0", 0.0, 2.0), ("R", "u1", 0.0, 2.0),
+                 ("A", "u0", 1.0, 3.0)])
+    assert tr.busy_time() == 3.0          # union [0,3], overlaps merged
+    assert tr.utilization() == 1.0
+
+
+def test_idle_gap_reduces_utilization():
+    tr = _trace([("L", "u0", 0.0, 1.0), ("E", "u0", 3.0, 4.0)])
+    assert tr.busy_time() == 2.0
+    assert tr.total_time() == 4.0
+    assert tr.utilization() == 0.5
+
+
+def test_wait_times_per_paper_definition():
+    """wait(A_i) = start(A_i) - end(L_i); wait(E_i) = start(E_i) - end(A_i)."""
+    tr = _trace([("L", "u0", 0.0, 1.0), ("A", "u0", 1.5, 2.0),
+                 ("E", "u0", 3.0, 3.5)])
+    w = tr.wait_by_stage()
+    assert w["A"] == pytest.approx(0.5)
+    assert w["E"] == pytest.approx(1.0)
+
+
+@given(st.lists(st.tuples(st.floats(0, 100), st.floats(0, 10)),
+                min_size=1, max_size=30))
+def test_merged_busy_never_exceeds_span(iv):
+    events = [("L", f"u{i}", s, s + max(d, 1e-6))
+              for i, (s, d) in enumerate(iv)]
+    tr = _trace(events, t0=min(e[2] for e in events),
+                t1=max(e[3] for e in events))
+    assert tr.busy_time() <= tr.total_time() + 1e-9
+    assert 0.0 <= tr.utilization() <= 1.0 + 1e-9
+
+
+@given(st.lists(st.tuples(st.floats(0, 50), st.floats(0.01, 5)),
+                min_size=1, max_size=20))
+def test_merge_intervals_is_disjoint_and_covers(iv):
+    ivs = [(s, s + d) for s, d in iv]
+    merged = PipelineTrace.merge_intervals(ivs)
+    for (a1, b1), (a2, b2) in zip(merged, merged[1:]):
+        assert b1 < a2                      # disjoint, sorted
+    # every original interval is inside some merged one
+    for s, e in ivs:
+        assert any(a <= s and e <= b for a, b in merged)
+
+
+def test_memory_accounting():
+    tr = PipelineTrace()
+    tr.t0 = 0.0
+    tr.record_memory("u0", 1000, 0.0, 2.0)
+    tr.record_memory("u1", 500, 1.0, 3.0)   # overlaps u0 -> peak 1500
+    tr.record_memory("u2", 200, 4.0, 5.0)
+    tr.t_end = 5.0
+    assert tr.memory_overhead_bytes() == 1500
+    assert tr.memory_total_bytes() == 1700
+    assert tr.memory_usage_time() == pytest.approx(2.0 + 2.0 + 1.0)
+
+
+def test_gantt_rows_ordering():
+    tr = _trace([("E", "u0", 2.0, 3.0), ("L", "u0", 0.0, 1.0)])
+    rows = tr.gantt_rows()
+    assert rows[0]["stage"] == "L" and rows[0]["start"] == 0.0
+    assert rows[1]["row"] == "Compute"
+    assert "Layer" in tr.render_gantt(40)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def test_scheduler_normal_before_expected_completion():
+    s = PriorityAwareScheduler(bw_bytes_per_s=1e9)
+    s.register("w0", nbytes=10 ** 9)       # expected ~1s
+    s.on_issue("w0")
+    assert s.adjust_priority("w0") == NORMAL
+    assert s.suspend_count == 0
+
+
+def test_scheduler_suspends_others_when_late():
+    s = PriorityAwareScheduler(bw_bytes_per_s=1e12, a_overhead_s=0.0)
+    st0 = s.register("w0", nbytes=10)      # expected completion ~instant
+    st1 = s.register("w1", nbytes=10)
+    st2 = s.register("w2", nbytes=10)
+    for u in ("w0", "w1", "w2"):
+        s.on_issue(u)
+    time.sleep(0.01)                       # now past expected completion
+    assert s.adjust_priority("w0") == HIGH
+    assert not st1.gate.is_set()           # suspended
+    assert not st2.gate.is_set()
+    assert st0.gate.is_set()               # critical stream still running
+    # completion resumes the others
+    s.on_complete("w0")
+    assert st1.gate.is_set() and st2.gate.is_set()
+
+
+def test_scheduler_completed_stream_is_normal():
+    s = PriorityAwareScheduler(bw_bytes_per_s=1e12)
+    s.register("w0", nbytes=10)
+    s.on_issue("w0")
+    s.on_complete("w0")
+    time.sleep(0.005)
+    assert s.adjust_priority("w0") == NORMAL
+    assert s.suspend_count == 0
+
+
+def test_scheduler_bandwidth_ema_updates():
+    s = PriorityAwareScheduler(bw_bytes_per_s=1e9)
+    s.register("w0", nbytes=50_000_000)
+    s.on_issue("w0")
+    time.sleep(0.05)                       # ~1e9 observed
+    s.on_complete("w0")
+    bw = s.stats()["bw_estimate"]
+    assert bw != 1e9                       # EMA moved toward observation
+
+
+def test_scheduler_disabled_never_suspends():
+    s = PriorityAwareScheduler(bw_bytes_per_s=1e12, enabled=False)
+    s.register("w0", nbytes=10)
+    s.register("w1", nbytes=10)
+    s.on_issue("w0")
+    time.sleep(0.01)
+    assert s.adjust_priority("w0") == NORMAL
+    assert s.suspend_count == 0

@@ -1,0 +1,130 @@
+"""Weight store: roundtrip, integrity, int8 quantization bounds,
+chunked suspendable reads."""
+import threading
+import time
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.models import transformer
+from repro.models.api import get_config
+from repro.store.store import (BandwidthModel, WeightStore, deploy_model,
+                               flatten_unit, unflatten_unit)
+
+
+@pytest.fixture
+def deployed(tmp_path):
+    cfg = get_config("smollm-360m", smoke=True)
+    m = transformer.build(cfg)
+    store = WeightStore(str(tmp_path))
+    deploy_model(store, m, "m", jax.random.key(5))
+    return store, m
+
+
+def test_roundtrip_exact(deployed):
+    store, m = deployed
+    for unit in ["embed", "block_001", "final"]:
+        leaves = store.read_and_deserialize("m", unit)
+        ab = m.abstract_unit(unit)
+        tree = unflatten_unit(ab, {k: v for k, (v, _) in leaves.items()})
+        ref = m.init_unit(unit, jax.random.split(
+            jax.random.key(5), len(m.unit_names()))[
+                m.unit_names().index(unit)])
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_crc_detects_corruption(deployed, tmp_path):
+    store, m = deployed
+    path = str(tmp_path / "m" / "block_000.bin")
+    with open(path, "r+b") as f:
+        f.seek(100)
+        byte = f.read(1)
+        f.seek(100)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(IOError, match="crc"):
+        store.read_and_deserialize("m", "block_000")
+
+
+def test_manifest_accounting(deployed):
+    store, m = deployed
+    man = store.manifest("m")
+    assert set(man["units"]) == set(m.unit_names())
+    total = store.model_nbytes("m")
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(m.abstract()))
+    assert total >= n_params * 4          # f32 leaves + alignment padding
+    assert total < n_params * 4 * 1.05    # padding bounded
+
+
+@given(n=st.integers(2, 64), m=st.integers(2, 64),
+       seed=st.integers(0, 2 ** 16))
+def test_int8_quant_roundtrip_bound(n, m, seed):
+    """Per-channel int8: |deq - w| <= scale/2 = amax/254 per column."""
+    r = np.random.default_rng(seed)
+    w = (r.standard_normal((n, m)) * r.uniform(0.01, 10)).astype(np.float32)
+    amax = np.abs(w).max(axis=0)
+    scale = np.where(amax > 0, amax / 127.0, 1.0)
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    deq = q.astype(np.float32) * scale
+    assert (np.abs(deq - w) <= scale / 2 + 1e-7).all()
+
+
+def test_int8_deploy_shrinks_bytes(tmp_path):
+    cfg = get_config("smollm-360m", smoke=True)
+    m = transformer.build(cfg)
+    store = WeightStore(str(tmp_path))
+    deploy_model(store, m, "f32", jax.random.key(0))
+    deploy_model(store, m, "i8", jax.random.key(0), quant="int8")
+    ratio = store.model_nbytes("i8") / store.model_nbytes("f32")
+    assert ratio < 0.35                   # ~4x for matrices, 1-D stays f32
+
+
+def test_suspend_and_resume(deployed):
+    store, m = deployed
+    gate = threading.Event()              # cleared -> suspended
+    got = {}
+
+    def reader():
+        got["raw"] = store.read_unit("m", "block_000", chunk_bytes=64,
+                                     gate=gate)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                   # blocked on the cleared gate
+    gate.set()
+    t.join(5)
+    assert not t.is_alive()
+    assert len(got["raw"]) == store.unit_nbytes("m", "block_000")
+
+
+def test_bandwidth_model_throttles(tmp_path):
+    cfg = get_config("smollm-360m", smoke=True)
+    m = transformer.build(cfg)
+    fast = WeightStore(str(tmp_path / "fast"))
+    deploy_model(fast, m, "m", jax.random.key(0))
+    slow = WeightStore(str(tmp_path / "fast"),
+                       BandwidthModel(bandwidth_mbps=20))
+    nbytes = fast.unit_nbytes("m", "embed")
+    t0 = time.monotonic()
+    slow.read_unit("m", "embed")
+    dur = time.monotonic() - t0
+    expect = nbytes / 20e6
+    assert dur >= expect * 0.8
+
+
+def test_flatten_unflatten_inverse(rng):
+    tree = {"a": {"b": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "c": [np.ones((4,), np.int32), np.zeros((2, 2), np.float32)]}
+    flat = flatten_unit(tree)
+    names = [n for n, _ in flat]
+    assert len(set(names)) == len(names)  # unique stable paths
+    ab = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+    back = unflatten_unit(ab, dict(flat))
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,43 @@
+"""End-to-end system behaviour: the launchers drive the full stack."""
+import numpy as np
+import pytest
+
+
+def test_train_launcher_end_to_end(tmp_path):
+    """train.py: init -> sharded train -> checkpoint -> resume."""
+    from repro.launch.train import main
+    hist = main(["--arch", "smollm-360m", "--smoke", "--steps", "30",
+                 "--seq", "32", "--batch", "4", "--lr", "5e-3",
+                 "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "10"])
+    assert hist["loss"][-1] < hist["loss"][0]
+    # resume picks up from the written checkpoint
+    hist2 = main(["--arch", "smollm-360m", "--smoke", "--steps", "10",
+                  "--seq", "32", "--batch", "4", "--lr", "5e-3",
+                  "--ckpt-dir", str(tmp_path / "ck"), "--resume"])
+    assert np.isfinite(hist2["loss"][-1])
+
+
+def test_train_launcher_with_compression():
+    from repro.launch.train import main
+    hist = main(["--arch", "smollm-360m", "--smoke", "--steps", "20",
+                 "--seq", "32", "--batch", "4", "--lr", "5e-3",
+                 "--compress-grads"])
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+@pytest.mark.slow
+def test_serve_launcher_end_to_end(tmp_path):
+    """serve.py: deploy -> trace replay -> cold/warm statistics."""
+    from repro.launch.serve import main
+    responses = main(["--models", "smollm-360m", "--strategy", "cicada",
+                      "--invocations", "6", "--duration", "60",
+                      "--keep-alive", "1000",
+                      "--store", str(tmp_path / "store"),
+                      "--bandwidth-mbps", "500"])
+    assert len(responses) == 6
+    colds = [r for r in responses if r.cold]
+    warms = [r for r in responses if not r.cold]
+    assert len(colds) >= 1 and len(warms) >= 1
+    # warm requests are much faster than cold starts
+    assert (np.mean([r.latency_s for r in warms])
+            < np.mean([r.latency_s for r in colds]))
