@@ -1,5 +1,7 @@
 """Fig. 8 analogue: trace-driven platform replay — cold/warm mix and
-per-strategy mean latency under the bursty Azure-like workload."""
+per-strategy mean latency under the bursty Azure-like workload, plus a
+concurrency sweep (serial seed-style replay vs ≥4 in-flight requests
+through the Router's worker pool)."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,10 +11,28 @@ from repro.serving.engine import ServerlessPlatform
 from repro.serving.trace import azure_like_trace, summarize
 
 
-def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada")):
+def _replay(store, models, args, trace, strat, *, concurrency=1,
+            max_instances=1):
+    builders = {}
+    for name in models:
+        cfg, model = common.get_model(name, args.quick)
+        builders[name] = (lambda m=model, c=cfg:
+                          (m, common.make_batch(c)))
+    platform = ServerlessPlatform(store, builders, strategy=strat,
+                                  keep_alive_s=45.0,
+                                  max_instances=max_instances)
+    rs = platform.run_trace(trace,
+                            lambda n: common.make_batch(
+                                common.get_model(n, args.quick)[0]),
+                            concurrency=concurrency)
+    return rs, platform
+
+
+def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
+        concurrencies=(1, 4)):
     args = args or common.std_parser(models=["resnet50"]).parse_args([])
-    store, _ = common.deployed_store(args)
     rows = []
+    store, _ = common.deployed_store(args)
     models = common.model_list(args)
     for name in models:
         common.ensure_deployed(store, name, args.quick)
@@ -20,16 +40,7 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada")):
                              models=models, seed=0)
     print(f"# trace: {summarize(trace)}")
     for strat in strategies:
-        builders = {}
-        for name in models:
-            cfg, model = common.get_model(name, args.quick)
-            builders[name] = (lambda m=model, c=cfg:
-                              (m, common.make_batch(c)))
-        platform = ServerlessPlatform(store, builders, strategy=strat,
-                                      keep_alive_s=45.0)
-        rs = platform.run_trace(trace,
-                                lambda n: common.make_batch(
-                                    common.get_model(n, args.quick)[0]))
+        rs, _ = _replay(store, models, args, trace, strat)
         lat = np.array([r.latency_s for r in rs])
         cold = np.array([r.cold for r in rs])
         rows.append([f"trace/{strat}/mean", lat.mean() * 1e6,
@@ -39,6 +50,19 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada")):
         if cold.any():
             rows.append([f"trace/{strat}/cold_mean",
                          lat[cold].mean() * 1e6, int(cold.sum())])
+    # concurrency sweep: same trace, Router worker pool + pool scale-out
+    for conc in concurrencies:
+        if conc <= 1:
+            continue
+        rs, platform = _replay(store, models, args, trace, "cicada",
+                               concurrency=conc, max_instances=conc)
+        lat = np.array([r.latency_s for r in rs])
+        q = np.array([r.queue_s for r in rs])
+        st = platform.last_router_stats
+        rows.append([f"trace/cicada/conc{conc}/mean", lat.mean() * 1e6,
+                     float(st.max_in_flight)])
+        rows.append([f"trace/cicada/conc{conc}/queue_mean",
+                     q.mean() * 1e6, float(st.max_queue_depth)])
     common.print_csv(["name", "us_per_call", "derived"], rows)
     return rows
 

@@ -5,9 +5,12 @@
   decoupler    async retrieval + out-of-order application (Sec. III-C/D)
   scheduler    Priority-Aware Scheduler, Algorithm 1 (Sec. III-E)
   strategies   traditional | pisel | mini | preload | cicada
+  units        PipelineUnit runtime: event-driven execution units
   coldstart    ColdStartEngine: request -> live model via the pipeline
 """
 from repro.core.coldstart import ColdStartEngine, LoadResult  # noqa: F401
 from repro.core.pipeline import PipelineTrace, StageEvent  # noqa: F401
 from repro.core.scheduler import PriorityAwareScheduler  # noqa: F401
 from repro.core.strategies import STRATEGIES, Strategy, get_strategy  # noqa: F401
+from repro.core.units import (PipelineContext, PipelineRuntime,  # noqa: F401
+                              PipelineState, PipelineUnit)

@@ -1,6 +1,8 @@
 """ColdStartEngine: request -> live model, through the paper's pipeline.
 
-Three execution units run as threads (exactly the paper's decomposition):
+Three execution units run as threads (exactly the paper's decomposition,
+as :class:`~repro.core.units.PipelineUnit` objects on one event-driven
+:class:`~repro.core.units.PipelineRuntime`):
 
   * **Layer unit** — constructs unit structures in order (MiniLoader or
     PISeL-faithful numerical init);
@@ -19,9 +21,8 @@ engine for warm requests.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,8 @@ from repro.core.decoupler import WeightDecoupler
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import PriorityAwareScheduler
 from repro.core.strategies import Strategy, get_strategy
+from repro.core.units import (APPLIED, OUTPUT, PipelineContext,
+                              PipelineRuntime, PipelineState, standard_units)
 from repro.kernels import ops
 from repro.store.store import WeightStore, unflatten_unit
 
@@ -127,16 +130,17 @@ class ColdStartEngine:
 
         trace = PipelineTrace()
         scheduler = PriorityAwareScheduler(enabled=strat.scheduler)
+        state = PipelineState()
         dec = WeightDecoupler(self.store, self.model_name, scheduler, trace,
                               io_workers=self.io_workers,
-                              chunk_bytes=self.chunk_bytes)
+                              chunk_bytes=self.chunk_bytes, state=state)
         trace.start()
 
         if not strat.pipelined:
             result = self._load_traditional(batch, units, keys, trace, dec)
         else:
             result = self._load_pipelined(batch, units, keys, trace, dec,
-                                          scheduler)
+                                          scheduler, state)
         dec.shutdown()
         trace.finish()
         return result
@@ -172,118 +176,18 @@ class ColdStartEngine:
 
     # ------------------------------------------------------- pipelined path
     def _load_pipelined(self, batch, units, keys, trace, dec,
-                        scheduler) -> LoadResult:
+                        scheduler, state: PipelineState) -> LoadResult:
         strat = self.strategy
-        model = self.model
-        cv = threading.Condition()
-        constructed: Dict[str, miniloader.ConstructedUnit] = {}
-        applied: Dict[str, PyTree] = {}
-        errors: List[BaseException] = []
-        out: Dict[str, Any] = {}
-
         if strat.decouple:
             dec.prefetch(units)                 # issue I/O at request arrival
 
-        def _guard(fn):
-            def wrapped():
-                try:
-                    fn()
-                except BaseException as e:
-                    with cv:
-                        errors.append(e)
-                        cv.notify_all()
-            return wrapped
+        ctx = PipelineContext(model=self.model, units=list(units),
+                              keys=list(keys), batch=batch, strategy=strat,
+                              trace=trace, decoupler=dec, scheduler=scheduler,
+                              state=state, apply_leaves=self._apply_leaves,
+                              apply_fn=self._apply_fn)
+        PipelineRuntime(standard_units(ctx), state).run()
 
-        # ------------------------------------------------------ Layer unit
-        def layer_unit():
-            for u, k in zip(units, keys):
-                if strat.scheduler:
-                    scheduler.adjust_priority(u)          # Algorithm 1 at L_i
-                with trace.record("L", u):
-                    cu = miniloader.construct_unit(model, u, k,
-                                                   mini=strat.mini)
-                with cv:
-                    constructed[u] = cu
-                    cv.notify_all()
-
-        # ----------------------------------------------------- Weight unit
-        def weight_unit_decoupled():
-            pending = set(units)
-            while pending:
-                with cv:
-                    if errors:
-                        return
-                    built = {u for u in pending if u in constructed}
-                    while not built:
-                        cv.wait(0.02)
-                        if errors:
-                            return
-                        built = {u for u in pending if u in constructed}
-                # the unit the compute unit needs next:
-                critical = min(pending, key=units.index)
-                u = dec.wait_ready(built, critical=critical)
-                if u is None:
-                    continue
-                cu = constructed[u]
-                with trace.record("A", u):
-                    params = self._apply_leaves(u, cu.abstract,
-                                                dec.ready[u])
-                trace.record_memory(u, cu.mem_bytes, cu.t_construct_end,
-                                    time.monotonic())
-                with cv:
-                    applied[u] = params
-                    pending.discard(u)
-                    cv.notify_all()
-
-        def weight_unit_fused():
-            for u in units:
-                with cv:
-                    while u not in constructed and not errors:
-                        cv.wait(0.02)
-                    if errors:
-                        return
-                    cu = constructed[u]
-                t0 = time.monotonic()
-                leaves = dec.fetch_sync(u)        # W_i: fused, in-order;
-                t_io = time.monotonic()           # the unit idles on I/O
-                params = self._apply_leaves(u, cu.abstract, leaves)
-                t1 = time.monotonic()
-                trace.add_event("R", u, t0, t_io)
-                trace.add_event("A", u, t_io, t1)
-                trace.record_memory(u, cu.mem_bytes, cu.t_construct_end, t1)
-                with cv:
-                    applied[u] = params
-                    cv.notify_all()
-
-        # ---------------------------------------------------- Compute unit
-        def compute_unit():
-            state: Dict[str, Any] = {"batch": batch}
-            for u in units:
-                with cv:
-                    while u not in applied and not errors:
-                        cv.wait(0.02)
-                    if errors:
-                        return
-                with trace.record("E", u):
-                    state = self._apply_fn(u)(applied[u], state)
-                    jax.block_until_ready(
-                        state["logits" if u == units[-1] else "x"])
-            out["logits"] = state["logits"]
-
-        threads = [
-            threading.Thread(target=_guard(layer_unit), name="layer-unit"),
-            threading.Thread(target=_guard(
-                weight_unit_decoupled if strat.decouple else
-                weight_unit_fused), name="weight-unit"),
-            threading.Thread(target=_guard(compute_unit),
-                             name="compute-unit"),
-        ]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        if errors:
-            raise errors[0]
-
-        params = model.assemble(applied)
-        return LoadResult(out["logits"], params, trace, strat.name)
+        params = self.model.assemble(state.peek(APPLIED))
+        return LoadResult(state.get(OUTPUT, "logits"), params, trace,
+                          strat.name)

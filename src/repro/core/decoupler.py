@@ -20,12 +20,13 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import PriorityAwareScheduler
+from repro.core.units import PipelineState
 from repro.store.store import WeightStore
 
 PyTree = Any
@@ -35,7 +36,12 @@ Leaves = Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]]
 class WeightDecoupler:
     def __init__(self, store: WeightStore, model_name: str,
                  scheduler: PriorityAwareScheduler, trace: PipelineTrace,
-                 *, io_workers: int = 4, chunk_bytes: int = 1 << 20):
+                 *, io_workers: int = 4, chunk_bytes: int = 1 << 20,
+                 state: Optional[PipelineState] = None):
+        """``state``: a PipelineState whose condition variable this
+        decoupler shares — stream completions then directly wake
+        pipeline units blocked on that state (single-CV signaling, no
+        cross-lock polling).  Standalone use gets a private CV."""
         self.store = store
         self.model_name = model_name
         self.scheduler = scheduler
@@ -44,7 +50,8 @@ class WeightDecoupler:
         self._pool = ThreadPoolExecutor(max_workers=io_workers,
                                         thread_name_prefix="cicada-io")
         self.ready: Dict[str, Leaves] = {}
-        self.cv = threading.Condition()
+        self.state = state
+        self.cv = state.cv if state is not None else threading.Condition()
         self.errors: List[BaseException] = []
 
     # ------------------------------------------------------ async retrieval
@@ -59,6 +66,8 @@ class WeightDecoupler:
     def _fetch(self, unit: str, st):
         try:
             self.scheduler.on_issue(unit)
+            with self.cv:           # waiters recompute Algorithm 1 deadlines
+                self.cv.notify_all()
             t0 = time.monotonic()
             raw = self.store.read_unit(
                 self.model_name, unit, chunk_bytes=self.chunk_bytes,
@@ -74,6 +83,8 @@ class WeightDecoupler:
         except BaseException as e:              # surfaced by the engine
             with self.cv:
                 self.errors.append(e)
+                if self.state is not None:
+                    self.state.errors.append(e)
                 self.cv.notify_all()
 
     # ------------------------------------------------------ sync (PISeL)
@@ -84,22 +95,8 @@ class WeightDecoupler:
         return self.store.deserialize(self.model_name, unit, raw)
 
     # -------------------------------------------------------------- waiting
-    def wait_ready(self, candidates: Set[str], *, critical: Optional[str],
-                   timeout: float = 0.05) -> Optional[str]:
-        """Block until some candidate's bytes are ready; return the
-        lowest-index one (stable order = ``sorted``).  While waiting,
-        re-run Algorithm 1 for the *critical* unit (the one the compute
-        unit needs next) so a late stream gets prioritized."""
-        while True:
-            with self.cv:
-                if self.errors:
-                    raise self.errors[0]
-                avail = sorted(candidates & self.ready.keys())
-                if avail:
-                    return avail[0]
-                self.cv.wait(timeout)
-            if critical is not None:
-                self.scheduler.adjust_priority(critical)
+    # (Waiting for ready bytes lives in DecoupledWeightUnit._next_ready:
+    # it needs construction state too, and shares this decoupler's CV.)
 
     def shutdown(self):
         self._pool.shutdown(wait=False)

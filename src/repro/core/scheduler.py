@@ -83,6 +83,22 @@ class PriorityAwareScheduler:
         st = self._streams[unit]
         return (st.t_issue + self._a) + st.nbytes / max(self._bw, 1.0)
 
+    def time_until_expected(self, unit: str) -> Optional[float]:
+        """Seconds until *unit*'s expected completion — the wake-up
+        deadline an event-driven waiter arms to run Algorithm 1 at
+        exactly the right moment.  None = no deadline applies (scheduler
+        disabled, stream unknown / not yet issued / completed, or the
+        stream is already the prioritized critical one)."""
+        if not self.enabled:
+            return None
+        with self._lock:
+            st = self._streams.get(unit)
+            if st is None or st.completed or st.t_issue == 0.0 or \
+                    self._critical == unit:
+                return None
+            return max(0.0, self.expected_completion(unit) -
+                       time.monotonic())
+
     def adjust_priority(self, unit: str) -> str:
         """Algorithm 1: called for the layer the pipeline needs next.
 

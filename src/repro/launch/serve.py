@@ -56,6 +56,10 @@ def main(argv=None):
     ap.add_argument("--invocations", type=int, default=40)
     ap.add_argument("--duration", type=float, default=600.0)
     ap.add_argument("--keep-alive", type=float, default=30.0)
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="router workers / max in-flight invocations")
+    ap.add_argument("--max-instances", type=int, default=1,
+                    help="instance-pool scale-out limit per model")
     ap.add_argument("--bandwidth-mbps", type=float, default=400.0)
     ap.add_argument("--store", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -81,16 +85,19 @@ def main(argv=None):
     print("trace:", summarize(trace))
 
     platform = ServerlessPlatform(store, builders, strategy=args.strategy,
-                                  keep_alive_s=args.keep_alive)
+                                  keep_alive_s=args.keep_alive,
+                                  max_instances=args.max_instances)
 
     def make_batch(name):
         return example_batch(get_config(name, smoke=args.smoke))
 
-    responses = platform.run_trace(trace, make_batch)
+    responses = platform.run_trace(trace, make_batch,
+                                   concurrency=args.concurrency)
     lat = np.array([r.latency_s for r in responses])
     cold = np.array([r.cold for r in responses])
     print(f"strategy={args.strategy}  n={len(responses)}  "
-          f"cold={cold.sum()} ({cold.mean():.0%})")
+          f"cold={cold.sum()} ({cold.mean():.0%})  "
+          f"concurrency={args.concurrency}")
     print(f"latency: mean={lat.mean() * 1e3:.1f}ms "
           f"p50={np.percentile(lat, 50) * 1e3:.1f}ms "
           f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
@@ -99,6 +106,16 @@ def main(argv=None):
         ut = np.array([r.utilization for r in responses])[cold]
         print(f"cold-start: mean={cl.mean() * 1e3:.1f}ms "
               f"pipeline-util={ut.mean():.1%}")
+    if args.concurrency > 1:
+        q = np.array([r.queue_s for r in responses])
+        rs = platform.last_router_stats
+        print(f"queueing: mean={q.mean() * 1e3:.1f}ms "
+              f"max={q.max() * 1e3:.1f}ms  "
+              f"max-in-flight={rs.max_in_flight}")
+    for name, ps in platform.pool_stats().items():
+        print(f"pool[{name}]: instances={ps.size} live={ps.live} "
+              f"cold={ps.cold_starts} warm={ps.warm_hits} "
+              f"evictions={ps.evictions}")
     return responses
 
 

@@ -1,0 +1,17 @@
+"""Serverless serving surface.
+
+  api      Request / RequestClass / Response / stats data model
+  policy   keep-alive eviction policies (TTL, never-evict)
+  pool     FunctionInstance + per-model InstancePool
+  router   thread-safe Router: admission control, priority dispatch
+  engine   ServerlessPlatform (trace replay on the Router) + LM server
+  trace    bursty Azure-like invocation workload generator
+"""
+from repro.serving.api import (AdmissionError, PoolStats, Request,  # noqa: F401
+                               RequestClass, Response, RouterStats)
+from repro.serving.policy import (EvictionPolicy, KeepAliveTTL,  # noqa: F401
+                                  NeverEvict, make_policy)
+from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401
+from repro.serving.router import Router  # noqa: F401
+from repro.serving.engine import (BatchedLMServer,  # noqa: F401
+                                  ServerlessPlatform)

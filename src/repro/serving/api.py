@@ -1,0 +1,83 @@
+"""Public serving data model: requests, priority classes, responses.
+
+The platform's front door speaks three types:
+
+  * :class:`Request` — one invocation of a deployed model function,
+    carrying the input batch, the trace's *logical* arrival time (used
+    for keep-alive accounting) and an optional explicit priority class;
+  * :class:`RequestClass` — dispatch priority.  Lower value = served
+    first.  The default classifier marks warm-servable work INFERENCE
+    and cold starts COLDSTART, implementing the Priority-Aware
+    Scheduler's "inference first" rule at the routing layer;
+  * :class:`Response` — the per-request record benchmarks consume: the
+    seed's fields (cold/load_s/infer_s/utilization/latency) plus the
+    queueing delay introduced by concurrent admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Optional
+
+
+class RequestClass(enum.IntEnum):
+    """Dispatch priority; lower value wins (inference-first rule)."""
+    INFERENCE = 0          # warm steady-state forward
+    COLDSTART = 1          # triggers the loading pipeline
+    BACKGROUND = 2         # prefetch / maintenance work
+
+
+@dataclasses.dataclass
+class Request:
+    """One invocation submitted to the Router."""
+    req_id: int
+    model: str
+    batch: Optional[Dict[str, Any]] = None
+    t_logical: float = 0.0          # trace arrival time (logical clock)
+    cls: Optional[RequestClass] = None   # None -> classified at submit
+    t_submit: float = 0.0           # wall clock, stamped by the Router
+
+
+@dataclasses.dataclass
+class Response:
+    req_id: int
+    model: str
+    cold: bool
+    t_arrival: float
+    t_done: float
+    load_s: float           # cold-start pipeline time (0 for warm)
+    infer_s: float          # steady-state inference time (warm requests)
+    utilization: float      # pipeline utilization (cold requests)
+    queue_s: float = 0.0    # admission -> service start (router queue +
+                            # pool wait + instance provisioning)
+    cls: RequestClass = RequestClass.INFERENCE
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+class AdmissionError(RuntimeError):
+    """Raised by Router.submit when admission control rejects a request
+    (pending queue at capacity)."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Point-in-time + cumulative counters for one InstancePool."""
+    model: str
+    size: int               # provisioned instances
+    live: int               # instances holding params
+    busy: int               # instances currently serving
+    cold_starts: int
+    warm_hits: int
+    evictions: int
+
+
+@dataclasses.dataclass
+class RouterStats:
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    max_queue_depth: int = 0
+    max_in_flight: int = 0

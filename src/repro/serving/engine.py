@@ -1,164 +1,114 @@
-"""Serverless serving engine.
+"""Serverless serving engine: trace replay on the Router/InstancePool
+platform API, plus the steady-state batched LM server.
 
-One :class:`FunctionInstance` models a container: it holds (at most) one
-live model.  The first request after provisioning is a **cold start**
-and goes through the Cicada pipeline (``ColdStartEngine``) — the
-triggering request's inference is computed layer-by-layer *inside* the
-loading pipeline, so its latency is the pipeline's end-to-end time.
-Subsequent requests are **warm**: direct steady-state forward (batched
-prefill + decode for LMs).
+:class:`ServerlessPlatform` wires one :class:`InstancePool` per deployed
+model behind a :class:`Router` and replays invocation traces through it.
+``run_trace(..., concurrency=N)`` admits up to N invocations
+concurrently (N router workers); ``concurrency=1`` reproduces the
+seed's strictly serial replay semantics exactly.  Keep-alive accounting
+runs on the trace's *logical* clock regardless of replay speed: before
+each submission the platform sweeps every pool, and the eviction policy
+(default: the seed's TTL rule) reclaims idle instances — re-triggering
+cold starts, the serverless lifecycle of the paper's Fig. 2.
 
-:class:`ServerlessPlatform` maps invocations to instances with a
-keep-alive policy (idle instances are reclaimed after ``keep_alive_s``,
-re-triggering cold starts — the serverless lifecycle the paper's Fig. 2
-describes).  Inference execution is given strict priority over
-background loading I/O: while a warm request is executing, newly issued
-retrieval streams for other instances start paused and resume after the
-step (the Priority-Aware Scheduler's "inference first" rule).
+The classes the old API exposed (``FunctionInstance``, ``Response``)
+are re-exported here so existing benchmarks and examples run unmodified.
 """
 from __future__ import annotations
 
-import dataclasses
-import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.coldstart import ColdStartEngine, LoadResult
+from repro.serving.api import Request, Response  # noqa: F401 (re-export)
+from repro.serving.policy import EvictionPolicy, make_policy
+from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401
+from repro.serving.router import Router
 from repro.store.store import WeightStore
 
 PyTree = Any
 
 
-@dataclasses.dataclass
-class Response:
-    req_id: int
-    model: str
-    cold: bool
-    t_arrival: float
-    t_done: float
-    load_s: float           # cold-start pipeline time (0 for warm)
-    infer_s: float          # steady-state inference time (warm requests)
-    utilization: float      # pipeline utilization (cold requests)
-
-    @property
-    def latency_s(self) -> float:
-        return self.t_done - self.t_arrival
-
-
-class FunctionInstance:
-    """A container with one deployed model function."""
-
-    def __init__(self, model, model_name: str, store: WeightStore, *,
-                 strategy: str = "cicada", io_workers: int = 4,
-                 chunk_bytes: int = 1 << 20, warm: bool = True,
-                 example_batch: Optional[Dict[str, jax.Array]] = None):
-        self.model = model
-        self.model_name = model_name
-        self.engine = ColdStartEngine(model, model_name, store,
-                                      strategy=strategy,
-                                      io_workers=io_workers,
-                                      chunk_bytes=chunk_bytes)
-        self.params: Optional[PyTree] = None
-        self.last_used = time.monotonic()
-        self.last_load: Optional[LoadResult] = None
-        self._fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
-        if warm and example_batch is not None:
-            self.engine.warmup(example_batch)
-            # warm the steady-state forward too
-            ab = jax.eval_shape(lambda: model.init(jax.random.key(0)))
-            zeros = jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), ab)
-            jax.block_until_ready(self._fwd(zeros, example_batch))
-
-    @property
-    def live(self) -> bool:
-        return self.params is not None
-
-    def evict(self):
-        self.params = None
-
-    def invoke(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, dict]:
-        """Returns (logits, {"cold": bool, "load_s": float, "infer_s"})."""
-        self.last_used = time.monotonic()
-        if not self.live:
-            res = self.engine.load(batch)
-            self.params = res.params
-            self.last_load = res
-            return res.logits, {"cold": True,
-                                "load_s": res.trace.total_time(),
-                                "infer_s": 0.0,
-                                "utilization": res.trace.utilization()}
-        t0 = time.monotonic()
-        logits = jax.block_until_ready(self._fwd(self.params, batch))
-        return logits, {"cold": False, "load_s": 0.0,
-                        "infer_s": time.monotonic() - t0,
-                        "utilization": 1.0}
-
-
 class ServerlessPlatform:
-    """Trace-driven multi-function platform (one instance per model)."""
+    """Trace-driven multi-function platform (one pool per model)."""
 
     def __init__(self, store: WeightStore,
-                 builders: Dict[str, Callable[[], Tuple[Any, Dict]]], *,
+                 builders: Dict[str, Callable[[], tuple]], *,
                  strategy: str = "cicada", keep_alive_s: float = 60.0,
-                 io_workers: int = 4, chunk_bytes: int = 1 << 20):
+                 io_workers: int = 4, chunk_bytes: int = 1 << 20,
+                 max_instances: int = 1,
+                 policy: Optional[EvictionPolicy] = None):
         """builders: model_name -> () -> (model, example_batch)."""
         self.store = store
         self.strategy = strategy
-        self.keep_alive_s = keep_alive_s
-        self.io_workers = io_workers
-        self.chunk_bytes = chunk_bytes
-        self._builders = builders
-        self._instances: Dict[str, FunctionInstance] = {}
+        self.policy = policy if policy is not None \
+            else make_policy(keep_alive_s)
+        self.pools: Dict[str, InstancePool] = {
+            name: InstancePool(name, builder, store, strategy=strategy,
+                               policy=self.policy,
+                               max_instances=max_instances,
+                               io_workers=io_workers,
+                               chunk_bytes=chunk_bytes)
+            for name, builder in builders.items()}
+        self.last_router_stats = None      # RouterStats of the last replay
 
-    def _instance(self, model_name: str) -> FunctionInstance:
-        if model_name not in self._instances:
-            model, example = self._builders[model_name]()
-            self._instances[model_name] = FunctionInstance(
-                model, model_name, self.store, strategy=self.strategy,
-                io_workers=self.io_workers, chunk_bytes=self.chunk_bytes,
-                example_batch=example)
-        return self._instances[model_name]
+    def router(self, *, workers: int = 4,
+               max_pending: Optional[int] = None) -> Router:
+        """A live Router over this platform's pools (caller shuts down)."""
+        return Router(self.pools, workers=workers, max_pending=max_pending)
 
-    def _reap(self, now: float):
-        for inst in self._instances.values():
-            if inst.live and now - inst.last_used > self.keep_alive_s:
-                inst.evict()
+    def sweep(self, logical_now: float) -> int:
+        """Run keep-alive eviction across all pools (idle instances
+        only); returns the number of instances reclaimed."""
+        return sum(p.sweep(logical_now) for p in self.pools.values())
+
+    def pool_stats(self) -> Dict[str, Any]:
+        return {name: p.stats() for name, p in self.pools.items()}
 
     def run_trace(self, invocations, make_batch,
-                  *, time_scale: float = 0.0) -> List[Response]:
+                  *, time_scale: float = 0.0,
+                  concurrency: int = 1) -> List[Response]:
         """Replay a trace.  time_scale=0 -> as-fast-as-possible (arrival
         gaps are skipped but keep-alive accounting still uses the
         *logical* clock); >0 -> sleep scaled real time between arrivals.
+
+        concurrency=1 replays strictly serially (seed semantics:
+        ``latency_s`` measures the invocation only — instance
+        provisioning and queue wait are reported in ``queue_s``);
+        concurrency=N>1 keeps up to N invocations in flight through
+        the Router's worker pool.  Keep-alive stays logical-clock
+        faithful per request: expired idle instances are evicted at
+        acquire time against the *requester's* arrival time, though an
+        instance kept busy by overlapping requests counts as
+        continuously active (so cold/warm mixes can differ from serial
+        replay under contention).
         """
-        out: List[Response] = []
-        logical_prev = None
-        clock = 0.0
-        for inv in invocations:
-            if logical_prev is not None:
-                gap = inv.t - logical_prev
-                clock += gap
-                if time_scale > 0:
-                    time.sleep(gap * time_scale)
-            logical_prev = inv.t
-            # logical keep-alive: evict instances idle longer than TTL
-            for inst in self._instances.values():
-                if inst.live and getattr(inst, "_logical_last", 0.0) \
-                        + self.keep_alive_s < clock:
-                    inst.evict()
-            inst = self._instance(inv.model)
-            batch = make_batch(inv.model)
-            t_arr = time.monotonic()
-            _, info = inst.invoke(batch)
-            t_done = time.monotonic()
-            inst._logical_last = clock
-            out.append(Response(inv.req_id, inv.model, info["cold"],
-                                t_arr, t_done, info["load_s"],
-                                info["infer_s"], info["utilization"]))
-        return out
+        router = self.router(workers=max(1, concurrency))
+        try:
+            futures = []
+            logical_prev = None
+            clock = 0.0
+            for inv in invocations:
+                if logical_prev is not None:
+                    gap = inv.t - logical_prev
+                    clock += gap
+                    if time_scale > 0:
+                        time.sleep(gap * time_scale)
+                logical_prev = inv.t
+                # logical keep-alive: evict instances idle past the TTL
+                self.sweep(clock)
+                fut = router.submit(Request(
+                    req_id=inv.req_id, model=inv.model,
+                    batch=make_batch(inv.model), t_logical=clock))
+                futures.append(fut)
+                if concurrency <= 1:
+                    fut.result()           # strict serial replay
+            return [f.result() for f in futures]
+        finally:
+            router.shutdown()
+            self.last_router_stats = router.stats
 
 
 # ---------------------------------------------------------------------------

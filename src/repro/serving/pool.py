@@ -1,0 +1,232 @@
+"""Function instances and per-model instance pools.
+
+One :class:`FunctionInstance` models a container: it holds (at most) one
+live model.  The first request after provisioning is a **cold start**
+and goes through the Cicada pipeline (``ColdStartEngine``) — the
+triggering request's inference is computed layer-by-layer *inside* the
+loading pipeline.  Subsequent requests are **warm**: direct steady-state
+forward.
+
+:class:`InstancePool` owns up to ``max_instances`` containers for one
+model function and hands them out under mutual exclusion:
+
+  * a request acquires an instance exclusively, so a cold model hit by
+    concurrent requests either rides the one in-flight pipeline
+    (followers wait and are served warm) or scales out onto a fresh
+    instance — never two pipelines loading into the same container;
+  * keep-alive is delegated to an :class:`~repro.serving.policy.
+    EvictionPolicy`; :meth:`sweep` offers only *idle* instances to it on
+    whatever clock the caller advances (logical trace time in replay);
+  * :meth:`stats` exposes cold/warm/eviction counters per pool.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coldstart import ColdStartEngine, LoadResult
+from repro.serving.api import PoolStats
+from repro.serving.policy import EvictionPolicy, NeverEvict
+from repro.store.store import WeightStore
+
+PyTree = Any
+
+
+class FunctionInstance:
+    """A container with one deployed model function.
+
+    Not internally synchronized: the owning pool guarantees at most one
+    request holds an instance between acquire() and release()."""
+
+    def __init__(self, model, model_name: str, store: WeightStore, *,
+                 strategy: str = "cicada", io_workers: int = 4,
+                 chunk_bytes: int = 1 << 20, warm: bool = True,
+                 example_batch: Optional[Dict[str, jax.Array]] = None):
+        self.model = model
+        self.model_name = model_name
+        self.engine = ColdStartEngine(model, model_name, store,
+                                      strategy=strategy,
+                                      io_workers=io_workers,
+                                      chunk_bytes=chunk_bytes)
+        self.params: Optional[PyTree] = None
+        self.last_load: Optional[LoadResult] = None
+        self._fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+        if warm and example_batch is not None:
+            self.engine.warmup(example_batch)
+            # warm the steady-state forward too
+            ab = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+            zeros = jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), ab)
+            jax.block_until_ready(self._fwd(zeros, example_batch))
+
+    @property
+    def live(self) -> bool:
+        return self.params is not None
+
+    def evict(self):
+        self.params = None
+
+    def invoke(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, dict]:
+        """Returns (logits, {"cold": bool, "load_s": float, "infer_s"})."""
+        if not self.live:
+            res = self.engine.load(batch)
+            self.params = res.params
+            self.last_load = res
+            return res.logits, {"cold": True,
+                                "load_s": res.trace.total_time(),
+                                "infer_s": 0.0,
+                                "utilization": res.trace.utilization()}
+        t0 = time.monotonic()
+        logits = jax.block_until_ready(self._fwd(self.params, batch))
+        return logits, {"cold": False, "load_s": 0.0,
+                        "infer_s": time.monotonic() - t0,
+                        "utilization": 1.0}
+
+
+class InstancePool:
+    """Thread-safe pool of FunctionInstances for one model function."""
+
+    def __init__(self, model_name: str,
+                 builder: Callable[[], Tuple[Any, Dict]],
+                 store: Optional[WeightStore] = None, *,
+                 strategy: str = "cicada",
+                 policy: Optional[EvictionPolicy] = None,
+                 max_instances: int = 1, io_workers: int = 4,
+                 chunk_bytes: int = 1 << 20,
+                 instance_factory: Optional[Callable[[], Any]] = None):
+        """builder: () -> (model, example_batch).  ``instance_factory``
+        overrides container provisioning (tests / future remote pools);
+        the default builds a warmed FunctionInstance."""
+        self.model_name = model_name
+        self.policy = policy if policy is not None else NeverEvict()
+        self.max_instances = max(1, int(max_instances))
+        self._builder = builder
+        self._store = store
+        self._strategy = strategy
+        self._io_workers = io_workers
+        self._chunk_bytes = chunk_bytes
+        self._factory = instance_factory or self._default_factory
+        self._cv = threading.Condition()
+        self._instances: List[Any] = []
+        self._idle: List[Any] = []
+        self._busy: List[Any] = []
+        self._creating = 0
+        self._last_used: Dict[int, float] = {}     # id(inst) -> logical t
+        self._cold_starts = 0
+        self._warm_hits = 0
+        self._evictions = 0
+
+    def _default_factory(self):
+        model, example = self._builder()
+        return FunctionInstance(model, self.model_name, self._store,
+                                strategy=self._strategy,
+                                io_workers=self._io_workers,
+                                chunk_bytes=self._chunk_bytes,
+                                example_batch=example)
+
+    # ------------------------------------------------------------ lifecycle
+    def acquire(self, *, timeout: Optional[float] = None,
+                logical_now: Optional[float] = None):
+        """Reserve an instance exclusively.  Preference order: a warm
+        (live) idle instance, then a cold idle one, then scale-out up to
+        ``max_instances``; otherwise block until a release.
+
+        ``logical_now``: the requester's logical arrival time — idle
+        instances whose keep-alive expired *before* this request are
+        evicted here rather than reused warm, so eviction semantics
+        stay per-request faithful even when replay runs far ahead of
+        the logical clock (concurrent as-fast-as-possible replay)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if logical_now is not None:
+                    self._evict_expired(logical_now)
+                inst = next((i for i in self._idle if i.live), None)
+                if inst is None and self._idle:
+                    inst = self._idle[0]
+                if inst is not None:
+                    self._idle.remove(inst)
+                    self._busy.append(inst)
+                    return inst
+                if len(self._instances) + self._creating \
+                        < self.max_instances:
+                    self._creating += 1
+                    break
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"pool {self.model_name!r} saturated "
+                        f"({self.max_instances} instances busy)")
+                self._cv.wait(remaining)
+        # Provision outside the lock: builder() + warmup compilation are
+        # expensive and must not serialize the pool.
+        try:
+            inst = self._factory()
+        except BaseException:
+            with self._cv:
+                self._creating -= 1
+                self._cv.notify_all()
+            raise
+        with self._cv:
+            self._creating -= 1
+            self._instances.append(inst)
+            self._busy.append(inst)
+        return inst
+
+    def release(self, inst, *, logical_now: float = 0.0,
+                cold: Optional[bool] = None):
+        with self._cv:
+            if inst not in self._busy:
+                raise ValueError("release of an instance not acquired")
+            self._busy.remove(inst)
+            self._idle.append(inst)
+            # out-of-order completions must not move the keep-alive
+            # clock backwards (a logically-older request finishing late)
+            self._last_used[id(inst)] = max(
+                self._last_used.get(id(inst), 0.0), logical_now)
+            if cold is True:
+                self._cold_starts += 1
+            elif cold is False:
+                self._warm_hits += 1
+            self._cv.notify_all()
+
+    def _evict_expired(self, now: float) -> int:
+        """Offer idle live instances to the eviction policy (caller
+        holds the lock); returns the number evicted."""
+        n = 0
+        for inst in self._idle:
+            if not inst.live:
+                continue
+            idle_s = now - self._last_used.get(id(inst), now)
+            if self.policy.should_evict(idle_s):
+                inst.evict()
+                n += 1
+        self._evictions += n
+        return n
+
+    def sweep(self, now: float) -> int:
+        """Run keep-alive eviction over idle live instances; returns the
+        number evicted.  Busy instances are never considered."""
+        with self._cv:
+            return self._evict_expired(now)
+
+    # -------------------------------------------------------------- queries
+    def any_live(self) -> bool:
+        """True when some instance holds params (a request routed here
+        is warm-servable -> INFERENCE class)."""
+        with self._cv:
+            return any(i.live for i in self._instances)
+
+    def stats(self) -> PoolStats:
+        with self._cv:
+            return PoolStats(model=self.model_name,
+                             size=len(self._instances),
+                             live=sum(1 for i in self._instances if i.live),
+                             busy=len(self._busy),
+                             cold_starts=self._cold_starts,
+                             warm_hits=self._warm_hits,
+                             evictions=self._evictions)

@@ -1,0 +1,161 @@
+"""Thread-safe request router: concurrent admission, priority dispatch.
+
+The Router is the platform's front door.  Any number of threads may
+:meth:`submit` concurrently; each submission is
+
+  1. **admitted** — rejected with :class:`AdmissionError` when the
+     pending queue is at capacity (admission control keeps a saturated
+     platform's queueing delay bounded instead of unbounded);
+  2. **classified** — explicit ``Request.cls`` wins, otherwise
+     warm-servable requests become INFERENCE and cold starts COLDSTART:
+     the Priority-Aware Scheduler's "inference first" rule applied at
+     the routing layer;
+  3. **queued by class** — a worker pool drains the queue
+     highest-priority-first (FIFO within a class) and drives the
+     request through the model's :class:`InstancePool`.
+
+``submit`` returns a ``concurrent.futures.Future[Response]``.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, Optional
+
+from repro.serving.api import (AdmissionError, Request, RequestClass,
+                               Response, RouterStats)
+from repro.serving.pool import InstancePool
+
+
+class Router:
+    def __init__(self, pools: Dict[str, InstancePool], *, workers: int = 4,
+                 max_pending: Optional[int] = None,
+                 acquire_timeout_s: float = 0.1):
+        """``acquire_timeout_s``: how long a worker may block on a
+        saturated pool before requeueing the request (to the tail of
+        its class) and serving other queued work — keeps a slow cold
+        pool from absorbing the whole worker pool and starving
+        higher-priority inference requests."""
+        self.pools = pools
+        self.max_pending = max_pending
+        self.acquire_timeout_s = acquire_timeout_s
+        self.stats = RouterStats()
+        self._cv = threading.Condition()
+        self._heap: list = []              # (class, seq, Request, Future)
+        self._seq = itertools.count()
+        self._stop = False
+        self._in_flight = 0
+        self._workers = [threading.Thread(target=self._worker,
+                                          name=f"router-worker-{i}",
+                                          daemon=True)
+                         for i in range(max(1, workers))]
+        for t in self._workers:
+            t.start()
+
+    # ------------------------------------------------------------ admission
+    def _classify(self, req: Request) -> RequestClass:
+        pool = self.pools.get(req.model)
+        if pool is not None and pool.any_live():
+            return RequestClass.INFERENCE
+        return RequestClass.COLDSTART
+
+    def submit(self, req: Request) -> "Future[Response]":
+        """Admit one invocation; returns a Future resolving to its
+        Response (or raising the dispatch error)."""
+        if req.model not in self.pools:
+            raise KeyError(f"no pool for model {req.model!r}")
+        req.t_submit = time.monotonic()
+        if req.cls is None:
+            req.cls = self._classify(req)
+        fut: "Future[Response]" = Future()
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("router is shut down")
+            if self.max_pending is not None and \
+                    len(self._heap) >= self.max_pending:
+                self.stats.rejected += 1
+                raise AdmissionError(
+                    f"queue at capacity ({self.max_pending} pending)")
+            self.stats.submitted += 1
+            heapq.heappush(self._heap,
+                           (int(req.cls), next(self._seq), req, fut))
+            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                             len(self._heap))
+            self._cv.notify()
+        return fut
+
+    # ------------------------------------------------------------- dispatch
+    def _worker(self):
+        while True:
+            with self._cv:
+                while not self._heap and not self._stop:
+                    self._cv.wait()
+                if not self._heap:
+                    return                 # stopped and drained
+                _, _, req, fut = heapq.heappop(self._heap)
+            self._dispatch(req, fut)
+
+    def _dispatch(self, req: Request, fut: "Future[Response]"):
+        pool = self.pools[req.model]
+        inst = None
+        try:
+            try:
+                inst = pool.acquire(timeout=self.acquire_timeout_s,
+                                    logical_now=req.t_logical)
+            except TimeoutError:
+                # pool saturated: requeue at the tail of its class so
+                # this worker can serve other (higher-priority) work
+                with self._cv:
+                    heapq.heappush(self._heap,
+                                   (int(req.cls), next(self._seq), req, fut))
+                    self._cv.notify()
+                return
+            # service starts here: t_arrival/latency_s measure the
+            # invocation itself (seed semantics) — router queueing,
+            # pool waits and instance provisioning live in queue_s
+            t_arr = time.monotonic()
+            with self._cv:
+                self._in_flight += 1
+                self.stats.max_in_flight = max(self.stats.max_in_flight,
+                                               self._in_flight)
+            try:
+                logits, info = inst.invoke(req.batch)
+            finally:
+                with self._cv:
+                    self._in_flight -= 1
+            t_done = time.monotonic()
+            pool.release(inst, logical_now=req.t_logical,
+                         cold=info["cold"])
+            inst = None
+            with self._cv:
+                self.stats.completed += 1
+            fut.set_result(Response(
+                req_id=req.req_id, model=req.model, cold=info["cold"],
+                t_arrival=t_arr, t_done=t_done,
+                load_s=info["load_s"], infer_s=info["infer_s"],
+                utilization=info["utilization"],
+                queue_s=t_arr - req.t_submit, cls=req.cls))
+        except BaseException as e:
+            if inst is not None:
+                pool.release(inst, logical_now=req.t_logical)
+            fut.set_exception(e)
+
+    # ------------------------------------------------------------- shutdown
+    def shutdown(self, wait: bool = True):
+        """Stop accepting work; workers drain the queue, then exit."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if wait:
+            for t in self._workers:
+                t.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False

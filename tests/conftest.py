@@ -5,10 +5,24 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 import pytest
-from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+# ``hypothesis`` is optional: property-based test modules are skipped at
+# collection when it is absent so the rest of the suite still runs.
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    collect_ignore = [
+        "test_distributed.py",
+        "test_layers.py",
+        "test_moe.py",
+        "test_pipeline_props.py",
+        "test_store.py",
+    ]
 
 
 @pytest.fixture

@@ -1,11 +1,13 @@
 """PipelineTrace math (utilization, waits, memory) + Priority-Aware
-Scheduler (Algorithm 1) unit tests."""
+Scheduler (Algorithm 1) unit tests.
+
+Property-based variants live in test_pipeline_props.py (hypothesis).
+"""
 import threading
 import time
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
 
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import HIGH, NORMAL, PriorityAwareScheduler
@@ -53,29 +55,6 @@ def test_wait_times_per_paper_definition():
     w = tr.wait_by_stage()
     assert w["A"] == pytest.approx(0.5)
     assert w["E"] == pytest.approx(1.0)
-
-
-@given(st.lists(st.tuples(st.floats(0, 100), st.floats(0, 10)),
-                min_size=1, max_size=30))
-def test_merged_busy_never_exceeds_span(iv):
-    events = [("L", f"u{i}", s, s + max(d, 1e-6))
-              for i, (s, d) in enumerate(iv)]
-    tr = _trace(events, t0=min(e[2] for e in events),
-                t1=max(e[3] for e in events))
-    assert tr.busy_time() <= tr.total_time() + 1e-9
-    assert 0.0 <= tr.utilization() <= 1.0 + 1e-9
-
-
-@given(st.lists(st.tuples(st.floats(0, 50), st.floats(0.01, 5)),
-                min_size=1, max_size=20))
-def test_merge_intervals_is_disjoint_and_covers(iv):
-    ivs = [(s, s + d) for s, d in iv]
-    merged = PipelineTrace.merge_intervals(ivs)
-    for (a1, b1), (a2, b2) in zip(merged, merged[1:]):
-        assert b1 < a2                      # disjoint, sorted
-    # every original interval is inside some merged one
-    for s, e in ivs:
-        assert any(a <= s and e <= b for a, b in merged)
 
 
 def test_memory_accounting():

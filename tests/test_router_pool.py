@@ -1,0 +1,343 @@
+"""Router / InstancePool / eviction-policy behaviour (the concurrent
+serving API): no duplicate pipeline loads, scale-out, inference-first
+priority under saturation, admission control, keep-alive edge cases."""
+import threading
+import time
+
+import pytest
+
+from repro.serving.api import AdmissionError, Request, RequestClass
+from repro.serving.policy import (KeepAliveTTL, NeverEvict, make_policy)
+from repro.serving.pool import InstancePool
+from repro.serving.router import Router
+
+
+class FakeInstance:
+    """FunctionInstance.invoke contract without jax/models."""
+
+    def __init__(self, load_s=0.05, infer_s=0.005):
+        self.params = None
+        self.loads = 0
+        self.load_s = load_s
+        self.infer_s = infer_s
+
+    @property
+    def live(self):
+        return self.params is not None
+
+    def evict(self):
+        self.params = None
+
+    def invoke(self, batch):
+        if not self.live:
+            self.loads += 1
+            time.sleep(self.load_s)
+            self.params = {"w": 1}
+            return None, {"cold": True, "load_s": self.load_s,
+                          "infer_s": 0.0, "utilization": 0.9}
+        time.sleep(self.infer_s)
+        return None, {"cold": False, "load_s": 0.0,
+                      "infer_s": self.infer_s, "utilization": 1.0}
+
+
+def fake_pool(name="m", *, max_instances=1, policy=None, load_s=0.05,
+              registry=None):
+    insts = registry if registry is not None else []
+
+    def factory():
+        inst = FakeInstance(load_s=load_s)
+        insts.append(inst)
+        return inst
+
+    return InstancePool(name, builder=None, policy=policy,
+                        max_instances=max_instances,
+                        instance_factory=factory)
+
+
+def _req(i, model="m", cls=None, t=0.0):
+    return Request(req_id=i, model=model, batch={}, t_logical=t, cls=cls)
+
+
+# ---------------------------------------------------------------------------
+# concurrent cold starts
+# ---------------------------------------------------------------------------
+
+def test_concurrent_cold_single_instance_one_pipeline():
+    """Four concurrent invocations of a cold model with max_instances=1:
+    exactly one pipeline load runs; followers are served warm."""
+    insts = []
+    pool = fake_pool(max_instances=1, load_s=0.1, registry=insts)
+    with Router({"m": pool}, workers=4) as router:
+        futs = [router.submit(_req(i)) for i in range(4)]
+        responses = [f.result(timeout=10) for f in futs]
+    assert sum(i.loads for i in insts) == 1
+    assert len(insts) == 1
+    assert sum(r.cold for r in responses) == 1
+    assert sum(not r.cold for r in responses) == 3
+
+
+def test_concurrent_cold_scales_out_no_duplicate_loads():
+    """With max_instances=4, concurrent cold invocations scale out onto
+    fresh instances — each container loads at most once."""
+    insts = []
+    pool = fake_pool(max_instances=4, load_s=0.2, registry=insts)
+    with Router({"m": pool}, workers=4) as router:
+        futs = [router.submit(_req(i)) for i in range(4)]
+        responses = [f.result(timeout=10) for f in futs]
+    assert all(i.loads == 1 for i in insts)
+    assert len(insts) <= 4
+    assert sum(r.cold for r in responses) == len(insts)
+    st = pool.stats()
+    assert st.size == len(insts)
+    assert st.cold_starts + st.warm_hits == 4
+
+
+def test_in_flight_concurrency_reaches_worker_count():
+    insts = []
+    pool = fake_pool(max_instances=4, load_s=0.3, registry=insts)
+    with Router({"m": pool}, workers=4) as router:
+        futs = [router.submit(_req(i)) for i in range(6)]
+        for f in futs:
+            f.result(timeout=15)
+    assert router.stats.max_in_flight >= 4
+
+
+# ---------------------------------------------------------------------------
+# priority dispatch + admission control
+# ---------------------------------------------------------------------------
+
+def test_inference_first_ordering_under_saturated_router():
+    """One worker, a long-running blocker in service, three queued
+    requests with explicit classes: dispatch order must be
+    INFERENCE < COLDSTART < BACKGROUND regardless of submit order."""
+    pool = fake_pool(max_instances=1, load_s=0.4)
+    done = []
+    with Router({"m": pool}, workers=1) as router:
+        blocker = router.submit(_req(0))
+        _wait_dispatched(pool)            # worker is now inside the load
+        futs = []
+        for rid, cls in [(1, RequestClass.BACKGROUND),
+                         (2, RequestClass.COLDSTART),
+                         (3, RequestClass.INFERENCE)]:
+            f = router.submit(_req(rid, cls=cls))
+            f.add_done_callback(
+                lambda fut: done.append(fut.result().req_id))
+            futs.append(f)
+        blocker.result(timeout=10)
+        for f in futs:
+            f.result(timeout=10)
+    assert done == [3, 2, 1]
+
+
+def test_default_classification_inference_when_warm():
+    pool = fake_pool(max_instances=1)
+    with Router({"m": pool}, workers=1) as router:
+        r0 = router.submit(_req(0)).result(timeout=10)
+        assert r0.cls == RequestClass.COLDSTART       # nothing live yet
+        r1 = router.submit(_req(1)).result(timeout=10)
+        assert r1.cls == RequestClass.INFERENCE       # warm-servable
+
+
+def _wait_dispatched(pool, n=1, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while pool.stats().busy < n:
+        assert time.monotonic() < deadline, "dispatch never happened"
+        time.sleep(0.005)
+
+
+def test_admission_control_rejects_when_queue_full():
+    pool = fake_pool(max_instances=1, load_s=0.3)
+    with Router({"m": pool}, workers=1, max_pending=1) as router:
+        blocker = router.submit(_req(0))
+        _wait_dispatched(pool)            # blocker dispatched, queue empty
+        ok = router.submit(_req(1))       # fills the one pending slot
+        with pytest.raises(AdmissionError):
+            router.submit(_req(2))
+        assert router.stats.rejected == 1
+        blocker.result(timeout=10)
+        ok.result(timeout=10)
+
+
+def test_unknown_model_rejected():
+    with Router({"m": fake_pool()}, workers=1) as router:
+        with pytest.raises(KeyError):
+            router.submit(_req(0, model="nope"))
+
+
+# ---------------------------------------------------------------------------
+# instance pool + eviction policies
+# ---------------------------------------------------------------------------
+
+def test_acquire_timeout_when_saturated():
+    pool = fake_pool(max_instances=1)
+    inst = pool.acquire()
+    with pytest.raises(TimeoutError):
+        pool.acquire(timeout=0.01)
+    pool.release(inst, logical_now=0.0)
+    assert pool.acquire(timeout=0.1) is inst
+
+
+def test_ttl_zero_evicts_as_soon_as_clock_advances():
+    pool = fake_pool(policy=KeepAliveTTL(0.0))
+    inst = pool.acquire()
+    inst.invoke({})
+    pool.release(inst, logical_now=0.0, cold=True)
+    assert pool.sweep(0.0) == 0           # no idle time elapsed yet
+    assert inst.live
+    assert pool.sweep(1e-9) == 1          # any positive idleness evicts
+    assert not inst.live
+    assert pool.stats().evictions == 1
+
+
+def test_never_evict_survives_arbitrary_idle():
+    pool = fake_pool(policy=NeverEvict())
+    inst = pool.acquire()
+    inst.invoke({})
+    pool.release(inst, logical_now=0.0, cold=True)
+    assert pool.sweep(1e12) == 0
+    assert inst.live
+
+
+def test_sweep_never_touches_busy_instances():
+    pool = fake_pool(policy=KeepAliveTTL(0.0))
+    inst = pool.acquire()
+    inst.invoke({})
+    pool.release(inst, logical_now=0.0, cold=True)
+    inst2 = pool.acquire()                # same instance, busy again
+    assert inst2 is inst
+    assert pool.sweep(100.0) == 0         # busy -> not offered to policy
+    assert inst.live
+    pool.release(inst, logical_now=100.0, cold=False)
+    assert pool.sweep(200.0) == 1
+
+
+def test_make_policy_shorthand():
+    assert isinstance(make_policy(None), NeverEvict)
+    assert isinstance(make_policy(float("inf")), NeverEvict)
+    p = make_policy(60.0)
+    assert isinstance(p, KeepAliveTTL)
+    assert not p.should_evict(60.0)       # seed semantics: strictly >
+    assert p.should_evict(60.0 + 1e-9)
+    with pytest.raises(ValueError):
+        KeepAliveTTL(-1.0)
+
+
+def test_warm_idle_preferred_over_cold_scale_out():
+    """A live idle instance is reused before provisioning a new one."""
+    insts = []
+    pool = fake_pool(max_instances=4, registry=insts)
+    inst = pool.acquire()
+    inst.invoke({})
+    pool.release(inst, logical_now=0.0, cold=True)
+    again = pool.acquire()
+    assert again is inst
+    assert len(insts) == 1
+
+
+# ---------------------------------------------------------------------------
+# run_trace on the Router (platform-level, fake pools for determinism)
+# ---------------------------------------------------------------------------
+
+def _fake_platform(policy=None, *, max_instances=1, load_s=0.2,
+                   registry=None):
+    """ServerlessPlatform with its pools swapped for jax-free fakes —
+    exercises run_trace's submission/sweep/clock logic in isolation."""
+    from repro.serving.engine import ServerlessPlatform
+    platform = ServerlessPlatform.__new__(ServerlessPlatform)
+    platform.policy = policy if policy is not None else NeverEvict()
+    platform.pools = {"m": fake_pool(max_instances=max_instances,
+                                     policy=platform.policy,
+                                     load_s=load_s, registry=registry)}
+    platform.last_router_stats = None
+    return platform
+
+
+def _trace(ts):
+    from repro.serving.trace import Invocation
+    return [Invocation(t, "m", i) for i, t in enumerate(ts)]
+
+
+def test_run_trace_concurrent_four_in_flight():
+    registry = []
+    platform = _fake_platform(max_instances=4, load_s=0.3,
+                              registry=registry)
+    out = platform.run_trace(_trace([0.0] * 8), lambda name: {},
+                             concurrency=4)
+    assert len(out) == 8
+    assert [r.req_id for r in out] == list(range(8))
+    assert platform.last_router_stats.max_in_flight >= 4
+    assert all(r.queue_s >= 0 for r in out)
+    assert sum(i.loads for i in registry) == sum(r.cold for r in out)
+
+
+def test_run_trace_serial_matches_seed_lifecycle():
+    platform = _fake_platform(policy=KeepAliveTTL(120.0))
+    out = platform.run_trace(_trace([0.0, 1.0, 300.0]), lambda name: {})
+    assert [r.cold for r in out] == [True, False, True]
+
+
+def test_run_trace_ttl_zero_every_request_cold():
+    platform = _fake_platform(policy=KeepAliveTTL(0.0))
+    out = platform.run_trace(_trace([0.0, 1.0, 2.0]), lambda name: {})
+    assert [r.cold for r in out] == [True, True, True]
+
+
+def test_run_trace_never_evict_stays_warm():
+    platform = _fake_platform(policy=NeverEvict())
+    out = platform.run_trace(_trace([0.0, 1e6, 2e6]), lambda name: {})
+    assert [r.cold for r in out] == [True, False, False]
+
+
+def test_latency_excludes_provisioning():
+    """Instance provisioning (builder + warmup compile) is queue time,
+    not service latency — latency_s measures the invocation only."""
+    def slow_factory():
+        time.sleep(0.3)                   # deploy-time warmup
+        return FakeInstance(load_s=0.05)
+
+    pool = InstancePool("m", builder=None, instance_factory=slow_factory)
+    with Router({"m": pool}, workers=1) as router:
+        r = router.submit(_req(0)).result(timeout=10)
+    assert r.cold
+    assert r.latency_s < 0.2              # ~load_s, not factory's 0.3 s
+    assert r.queue_s >= 0.3               # provisioning accounted here
+
+
+def test_concurrent_replay_still_honours_keepalive():
+    """Even when as-fast-as-possible replay runs far ahead of the
+    logical clock, an idle instance whose TTL expired before the
+    requester's arrival is evicted at acquire time (cold again)."""
+    platform = _fake_platform(policy=KeepAliveTTL(45.0), load_s=0.05)
+    out = platform.run_trace(_trace([0.0, 100.0]), lambda name: {},
+                             concurrency=2)
+    assert [r.cold for r in out] == [True, True]
+
+
+def test_saturated_cold_pool_does_not_starve_warm_inference():
+    """Workers requeue on a saturated pool instead of blocking, so a
+    queued warm request on another model is served while a cold start
+    is still in flight."""
+    pool_a = fake_pool("a", max_instances=1, load_s=0.8)
+    pool_b = fake_pool("b", max_instances=1, load_s=0.01)
+    b_inst = pool_b.acquire()
+    b_inst.invoke({})                     # warm b up front
+    pool_b.release(b_inst, logical_now=0.0, cold=True)
+    with Router({"a": pool_a, "b": pool_b}, workers=2) as router:
+        a1 = router.submit(_req(0, model="a"))
+        a2 = router.submit(_req(1, model="a"))
+        _wait_dispatched(pool_a)
+        b1 = router.submit(_req(2, model="b"))
+        rb = b1.result(timeout=10)
+        ra2 = a2.result(timeout=10)
+    assert not rb.cold
+    assert rb.t_done < ra2.t_done         # b served during a's cold work
+    assert rb.queue_s < 0.6
+
+
+def test_response_has_seed_fields_plus_queueing():
+    platform = _fake_platform()
+    (r,) = platform.run_trace(_trace([0.0]), lambda name: {})
+    for field in ("req_id", "model", "cold", "t_arrival", "t_done",
+                  "load_s", "infer_s", "utilization", "queue_s"):
+        assert hasattr(r, field)
+    assert r.latency_s > 0

@@ -63,6 +63,26 @@ def test_platform_trace_replay(deployed):
     assert all(r.latency_s > 0 for r in out)
 
 
+def test_platform_concurrent_replay(deployed):
+    """run_trace(concurrency=4): concurrent cold starts scale the pool
+    out, responses keep trace order and gain queueing delay."""
+    store, m, cfg, batch = deployed
+    builders = {"smollm-360m": lambda: (m, batch)}
+    platform = ServerlessPlatform(store, builders, strategy="cicada",
+                                  keep_alive_s=1000.0, max_instances=2)
+    trace = [Invocation(0.0, "smollm-360m", i) for i in range(4)]
+    out = platform.run_trace(trace, lambda name: batch, concurrency=4)
+    assert [r.req_id for r in out] == [0, 1, 2, 3]
+    assert sum(r.cold for r in out) == 2          # one per instance
+    assert all(r.queue_s >= 0 for r in out)
+    assert all(r.latency_s > 0 for r in out)
+    ps = platform.pool_stats()["smollm-360m"]
+    assert ps.size == 2
+    assert ps.cold_starts == 2 and ps.warm_hits == 2
+    assert platform.last_router_stats.submitted == 4
+    assert platform.last_router_stats.completed == 4
+
+
 def test_trace_generator_statistics():
     tr = azure_like_trace(duration_s=3600.0, n_invocations=2426,
                           models=["a", "b", "c"], seed=0)

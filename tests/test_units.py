@@ -1,0 +1,116 @@
+"""PipelineState / PipelineUnit runtime: event-driven signaling (no
+fixed-interval polling), deadline wake-ups, error propagation."""
+import threading
+import time
+
+import pytest
+
+from repro.core.units import (APPLIED, CONSTRUCTED, PipelineRuntime,
+                              PipelineState, PipelineUnit)
+
+
+def test_publish_wakes_waiter_promptly():
+    state = PipelineState()
+    got = {}
+
+    def waiter():
+        got["value"] = state.wait_for(CONSTRUCTED, "u0")
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    state.publish(CONSTRUCTED, "u0", 42)
+    t.join(timeout=2.0)
+    assert not t.is_alive()
+    assert got["value"] == 42
+    # woken by notification (scheduling slack only, no polling grid)
+    assert time.monotonic() - t0 < 0.25
+
+
+def test_wait_until_predicate_over_multiple_stages():
+    state = PipelineState()
+    out = {}
+
+    def waiter():
+        out["u"] = state.wait_until(
+            lambda: "u1" if ("u1" in state._slots.get(CONSTRUCTED, {})
+                             and "u1" in state._slots.get(APPLIED, {}))
+            else None)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    state.publish(CONSTRUCTED, "u1", object())
+    time.sleep(0.02)
+    assert t.is_alive()                    # only one of two conditions
+    state.publish(APPLIED, "u1", object())
+    t.join(timeout=2.0)
+    assert out["u"] == "u1"
+
+
+def test_deadline_callback_fires_once_then_sleeps():
+    state = PipelineState()
+    fired = []
+    deadline_at = time.monotonic() + 0.03
+
+    def deadline_fn():
+        if fired:
+            return None                    # after firing: no deadline
+        return deadline_at - time.monotonic()
+
+    def waiter():
+        state.wait_until(
+            lambda: state._slots.get(APPLIED, {}).get("u"),
+            deadline_fn=deadline_fn,
+            on_deadline=lambda: fired.append(time.monotonic()))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.3)
+    assert len(fired) == 1                 # exactly one deadline wake
+    assert fired[0] >= deadline_at - 1e-3  # never early
+    state.publish(APPLIED, "u", 1)
+    t.join(timeout=2.0)
+    assert not t.is_alive()
+
+
+def test_error_propagates_to_waiters_and_runtime():
+    state = PipelineState()
+
+    class Boom(PipelineUnit):
+        name = "boom"
+
+        def run(self):
+            raise RuntimeError("unit exploded")
+
+    class Blocked(PipelineUnit):
+        name = "blocked"
+
+        def run(self):
+            self.ctx.state.wait_for(APPLIED, "never")
+
+    class Ctx:                             # minimal context for the test
+        pass
+
+    ctx = Ctx()
+    ctx.state = state
+    rt = PipelineRuntime([Boom(ctx), Blocked(ctx)], state)
+    with pytest.raises(RuntimeError, match="unit exploded"):
+        rt.run()                           # blocked unit must not hang
+
+
+def test_shared_cv_wakes_across_components():
+    """A producer signaling through the shared CV (the decoupler's I/O
+    pool pattern) wakes a state waiter without any state.publish."""
+    state = PipelineState()
+    ready = {}
+
+    def producer():
+        time.sleep(0.03)
+        with state.cv:
+            ready["u"] = 7
+            state.cv.notify_all()
+
+    threading.Thread(target=producer).start()
+    val = state.wait_until(lambda: ready.get("u"))
+    assert val == 7
