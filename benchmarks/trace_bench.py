@@ -1,26 +1,39 @@
 """Fig. 8 analogue: trace-driven platform replay — cold/warm mix and
-per-strategy mean latency under the bursty Azure-like workload, plus a
-concurrency sweep (serial seed-style replay vs ≥4 in-flight requests
-through the Router's worker pool)."""
+per-strategy mean latency under the bursty Azure-like workload, plus
+
+  * a concurrency sweep (serial seed-style replay vs ≥4 in-flight
+    requests through the Router's worker pool), and
+  * a scale-out sweep for the node-local WeightCache: cold-baseline vs
+    warm-cache cold-start latency, and single-flight reads under
+    concurrent scale-out of one model.
+
+Run directly for CI's bench-smoke job:
+
+    PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
+        --invocations 8 --json-out BENCH_trace.json
+"""
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
 from benchmarks import common
 from repro.serving.engine import ServerlessPlatform
-from repro.serving.trace import azure_like_trace, summarize
+from repro.serving.trace import Invocation, azure_like_trace, summarize
 
 
 def _replay(store, models, args, trace, strat, *, concurrency=1,
-            max_instances=1):
+            max_instances=1, keep_alive_s=45.0, cache_budget_bytes=None):
     builders = {}
     for name in models:
         cfg, model = common.get_model(name, args.quick)
         builders[name] = (lambda m=model, c=cfg:
                           (m, common.make_batch(c)))
     platform = ServerlessPlatform(store, builders, strategy=strat,
-                                  keep_alive_s=45.0,
-                                  max_instances=max_instances)
+                                  keep_alive_s=keep_alive_s,
+                                  max_instances=max_instances,
+                                  cache_budget_bytes=cache_budget_bytes)
     rs = platform.run_trace(trace,
                             lambda n: common.make_batch(
                                 common.get_model(n, args.quick)[0]),
@@ -28,9 +41,56 @@ def _replay(store, models, args, trace, strat, *, concurrency=1,
     return rs, platform
 
 
+def scaleout_sweep(store, models, args, *, n_instances=2):
+    """Cold vs warm-cache cold starts under the shared WeightCache.
+
+    Phase rows (keep-alive expires between two invocations, so both
+    are cold starts; with the cache the second one's retrieval is
+    all hits):
+      recold_nocache — second cold start, no cache (baseline: full re-read)
+      recold_cache   — second cold start, warm cache (~zero retrieval)
+    Concurrency rows (n_instances simultaneous cold starts of one
+    model single-flight each unit's read):
+      scaleout{N}_cold_mean + the cache's deduped-read count.
+    """
+    rows = []
+    name = models[0]
+    recold = {}
+    for label, budget in (("nocache", None), ("cache", 0)):
+        # 0 -> unbounded budget; None -> cache disabled
+        tr = [Invocation(0.0, name, 0), Invocation(1000.0, name, 1)]
+        rs, platform = _replay(store, [name], args, tr, "cicada",
+                               keep_alive_s=10.0,
+                               cache_budget_bytes=budget)
+        assert [r.cold for r in rs] == [True, True]
+        recold[label] = rs[1].latency_s
+        rows.append([f"trace/cicada/recold_{label}", rs[1].latency_s * 1e6,
+                     rs[0].latency_s * 1e6])
+    if recold["cache"] > 0:
+        rows.append(["trace/cicada/recold_speedup",
+                     recold["nocache"] / recold["cache"], 0.0])
+    # concurrent scale-out: n_instances cold starts at once, one store
+    # read per unit node-wide
+    tr = [Invocation(0.0, name, i) for i in range(n_instances)]
+    rs, platform = _replay(store, [name], args, tr, "cicada",
+                           concurrency=n_instances,
+                           max_instances=n_instances,
+                           cache_budget_bytes=0)
+    lat = np.array([r.latency_s for r in rs])
+    cs = platform.cache_stats()
+    rows.append([f"trace/cicada/scaleout{n_instances}_cold_mean",
+                 lat.mean() * 1e6, float(sum(r.cold for r in rs))])
+    # every hit is a store read avoided (waits are the subset of hits
+    # that blocked on a concurrent leader's in-flight read)
+    rows.append([f"trace/cicada/scaleout{n_instances}_deduped_reads",
+                 float(cs.hits), float(cs.misses)])
+    return rows
+
+
 def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
         concurrencies=(1, 4)):
     args = args or common.std_parser(models=["resnet50"]).parse_args([])
+    n_invocations = getattr(args, "invocations", None) or n_invocations
     rows = []
     store, _ = common.deployed_store(args)
     models = common.model_list(args)
@@ -63,9 +123,27 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
                      float(st.max_in_flight)])
         rows.append([f"trace/cicada/conc{conc}/queue_mean",
                      q.mean() * 1e6, float(st.max_queue_depth)])
+    # scale-out sweep: node-local WeightCache, cold vs warm-cache
+    rows.extend(scaleout_sweep(store, models, args))
     common.print_csv(["name", "us_per_call", "derived"], rows)
+    json_out = getattr(args, "json_out", None)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"bench": "trace",
+                       "header": ["name", "us_per_call", "derived"],
+                       "rows": rows}, f, indent=2)
+        print(f"# wrote {json_out}")
     return rows
 
 
+def main(argv=None):
+    ap = common.std_parser(models=["resnet50"])
+    ap.add_argument("--invocations", type=int, default=None,
+                    help="trace length (default 24)")
+    ap.add_argument("--json-out", default=None,
+                    help="also write rows as JSON (CI artifact)")
+    return run(ap.parse_args(argv))
+
+
 if __name__ == "__main__":
-    run()
+    main()

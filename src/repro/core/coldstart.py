@@ -36,6 +36,7 @@ from repro.core.strategies import Strategy, get_strategy
 from repro.core.units import (APPLIED, OUTPUT, PipelineContext,
                               PipelineRuntime, PipelineState, standard_units)
 from repro.kernels import ops
+from repro.store.cache import WeightCache
 from repro.store.store import WeightStore, unflatten_unit
 
 PyTree = Any
@@ -53,9 +54,13 @@ class ColdStartEngine:
     def __init__(self, model, model_name: str, store: WeightStore, *,
                  strategy: str = "cicada", io_workers: int = 4,
                  chunk_bytes: int = 1 << 20,
-                 apply_dtype=None):
+                 apply_dtype=None, cache: Optional[WeightCache] = None):
         """apply_dtype: cast weights to this dtype at application time
-        (None -> keep stored dtype)."""
+        (None -> keep stored dtype).
+
+        cache: node-local shared WeightCache — decoupled retrieval
+        streams consult it before issuing I/O, so scale-out cold starts
+        of the same model single-flight every store read."""
         self.model = model
         self.model_name = model_name
         self.store = store
@@ -63,6 +68,7 @@ class ColdStartEngine:
         self.io_workers = io_workers
         self.chunk_bytes = chunk_bytes
         self.apply_dtype = apply_dtype
+        self.cache = cache
         self._jit_apply: Dict[str, Any] = {}
 
     # -------------------------------------------------------------- helpers
@@ -133,15 +139,21 @@ class ColdStartEngine:
         state = PipelineState()
         dec = WeightDecoupler(self.store, self.model_name, scheduler, trace,
                               io_workers=self.io_workers,
-                              chunk_bytes=self.chunk_bytes, state=state)
+                              chunk_bytes=self.chunk_bytes, state=state,
+                              cache=self.cache if strat.decouple else None)
         trace.start()
 
-        if not strat.pipelined:
-            result = self._load_traditional(batch, units, keys, trace, dec)
-        else:
-            result = self._load_pipelined(batch, units, keys, trace, dec,
-                                          scheduler, state)
-        dec.shutdown()
+        try:
+            if not strat.pipelined:
+                result = self._load_traditional(batch, units, keys, trace,
+                                                dec)
+            else:
+                result = self._load_pipelined(batch, units, keys, trace, dec,
+                                              scheduler, state)
+        finally:
+            # shutdown now guards shared-cache invariants (pin sweep +
+            # unregister_load), so it must run on the failure path too
+            dec.shutdown()
         trace.finish()
         return result
 

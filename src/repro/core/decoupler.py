@@ -14,6 +14,16 @@ Weight loading has two phases with a ~4:1 cost ratio (paper Fig. 5c):
 
 In the PISeL baseline the two phases are fused and strictly ordered;
 ``fetch_sync`` provides that path.
+
+With a node-local :class:`~repro.store.cache.WeightCache` attached,
+every stream consults the cache before issuing I/O: a hit publishes
+``ready[unit]`` immediately (a ~zero-cost "R" trace event, marked
+``cached``), a miss single-flights the store read node-wide — the
+first loader of a unit reads, concurrent loads of the same model wait
+on the shared cache and reuse the bytes.  Cached units stay pinned
+from retrieval until weight application (released via
+:meth:`checkin`), so eviction pressure can never reclaim a unit an
+in-flight — possibly Algorithm-1-critical — load is about to apply.
 """
 from __future__ import annotations
 
@@ -27,6 +37,7 @@ import numpy as np
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import PriorityAwareScheduler
 from repro.core.units import PipelineState
+from repro.store.cache import LOAD, WeightCache
 from repro.store.store import WeightStore
 
 PyTree = Any
@@ -37,27 +48,39 @@ class WeightDecoupler:
     def __init__(self, store: WeightStore, model_name: str,
                  scheduler: PriorityAwareScheduler, trace: PipelineTrace,
                  *, io_workers: int = 4, chunk_bytes: int = 1 << 20,
-                 state: Optional[PipelineState] = None):
+                 state: Optional[PipelineState] = None,
+                 cache: Optional[WeightCache] = None):
         """``state``: a PipelineState whose condition variable this
         decoupler shares — stream completions then directly wake
         pipeline units blocked on that state (single-CV signaling, no
-        cross-lock polling).  Standalone use gets a private CV."""
+        cross-lock polling).  Standalone use gets a private CV.
+
+        ``cache``: optional node-local WeightCache consulted before any
+        I/O is issued (shared across engines/instances for scale-out
+        reuse and single-flight reads)."""
         self.store = store
         self.model_name = model_name
         self.scheduler = scheduler
         self.trace = trace
         self.chunk_bytes = chunk_bytes
+        self.cache = cache
         self._pool = ThreadPoolExecutor(max_workers=io_workers,
                                         thread_name_prefix="cicada-io")
         self.ready: Dict[str, Leaves] = {}
         self.state = state
         self.cv = state.cv if state is not None else threading.Condition()
         self.errors: List[BaseException] = []
+        self._pinned: set = set()        # units holding a cache reference
+        self._load_registered = False
+        self._closed = False
 
     # ------------------------------------------------------ async retrieval
     def prefetch(self, units: List[str]):
         """Issue every retrieval stream now (at request arrival) — this is
         what lets retrieval overlap layer construction."""
+        if self.cache is not None and not self._load_registered:
+            self.cache.register_load(self.model_name)
+            self._load_registered = True
         for u in units:
             nbytes = self.store.unit_nbytes(self.model_name, u)
             st = self.scheduler.register(u, nbytes)
@@ -69,23 +92,74 @@ class WeightDecoupler:
             with self.cv:           # waiters recompute Algorithm 1 deadlines
                 self.cv.notify_all()
             t0 = time.monotonic()
-            raw = self.store.read_unit(
-                self.model_name, unit, chunk_bytes=self.chunk_bytes,
-                gate=st.gate,
-                on_progress=lambda d, t: self.scheduler.on_progress(
-                    unit, d, t))
-            leaves = self.store.deserialize(self.model_name, unit, raw)
-            self.trace.add_event("R", unit, t0, time.monotonic())
-            self.scheduler.on_complete(unit)
+            leaves, cached = self._retrieve(unit, st)
+            self.trace.add_event("R", unit, t0, time.monotonic(),
+                                 meta={"cached": True} if cached else None)
+            self.scheduler.on_complete(unit, observed=not cached)
             with self.cv:
                 self.ready[unit] = leaves
                 self.cv.notify_all()
         except BaseException as e:              # surfaced by the engine
+            self.scheduler.on_error(unit)       # un-park suspended streams
             with self.cv:
                 self.errors.append(e)
                 if self.state is not None:
                     self.state.errors.append(e)
                 self.cv.notify_all()
+
+    def _retrieve(self, unit: str, st) -> Tuple[Leaves, bool]:
+        """One stream's bytes: cache hit / single-flight wait / leader
+        store read.  Returns (leaves, served_from_cache)."""
+        if self.cache is None:
+            return self._read_store(unit, st), False
+        # A hit OR a wait on another load's read is "external" to this
+        # pipeline's I/O: Algorithm 1 must not prioritize it (see
+        # PriorityAwareScheduler.mark_external).  We cannot know which
+        # before begin() may block, so flag optimistically and unflag
+        # on the LOAD outcome.
+        self.scheduler.mark_external(unit)
+        status, leaves = self.cache.begin(self.model_name, unit)
+        if status == LOAD:
+            self.scheduler.mark_external(unit, False)
+            try:
+                leaves = self._read_store(unit, st)
+                self.cache.complete(self.model_name, unit, leaves,
+                                    st.nbytes)
+            except BaseException:
+                self.cache.abort(self.model_name, unit)
+                raise
+            self._pin(unit)
+            return leaves, False
+        self._pin(unit)
+        return leaves, True
+
+    def _pin(self, unit: str):
+        with self.cv:
+            if not self._closed:
+                self._pinned.add(unit)
+                return
+        # shutdown already swept pins: release straight away
+        self.cache.release(self.model_name, unit)
+
+    def _read_store(self, unit: str, st) -> Leaves:
+        raw = self.store.read_unit(
+            self.model_name, unit, chunk_bytes=self.chunk_bytes,
+            gate=st.gate,
+            on_progress=lambda d, t: self.scheduler.on_progress(
+                unit, d, t))
+        return self.store.deserialize(self.model_name, unit, raw)
+
+    # ------------------------------------------------------ cache bookkeeping
+    def checkin(self, unit: str):
+        """Weight application of ``unit`` is done: drop its cache pin
+        (no-op without a cache)."""
+        if self.cache is None:
+            return
+        with self.cv:
+            if unit not in self._pinned:
+                return
+            self._pinned.discard(unit)
+        self.cache.release(self.model_name, unit)
 
     # ------------------------------------------------------ sync (PISeL)
     def fetch_sync(self, unit: str) -> Leaves:
@@ -100,3 +174,12 @@ class WeightDecoupler:
 
     def shutdown(self):
         self._pool.shutdown(wait=False)
+        if self.cache is not None:
+            with self.cv:
+                self._closed = True
+                pinned, self._pinned = self._pinned, set()
+            for u in pinned:                 # pins left by an aborted load
+                self.cache.release(self.model_name, u)
+            if self._load_registered:
+                self._load_registered = False
+                self.cache.unregister_load(self.model_name)

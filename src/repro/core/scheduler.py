@@ -33,6 +33,8 @@ class StreamState:
     t_issue: float = 0.0
     t_done: Optional[float] = None
     bytes_done: int = 0
+    external: bool = False                # served by the WeightCache, not
+                                          # a local device read
 
     @property
     def completed(self) -> bool:
@@ -66,17 +68,46 @@ class PriorityAwareScheduler:
         with self._lock:
             self._streams[unit].bytes_done = done
 
-    def on_complete(self, unit: str):
+    def mark_external(self, unit: str, external: bool = True):
+        """The unit is being served by the node-local WeightCache (a
+        hit, or a wait on another load's read): it is not a local device
+        read, so Algorithm 1 must neither prioritize it (suspending
+        local streams cannot speed it up — and doing so across two
+        concurrent loads that lead each other's units would deadlock)
+        nor arm a bandwidth-based deadline for it."""
+        with self._lock:
+            self._streams[unit].external = external
+
+    def on_complete(self, unit: str, *, observed: bool = True):
+        """``observed=False``: the stream finished without a device
+        read (cache hit) — complete it without folding the ~zero
+        duration into the bandwidth EMA."""
         with self._lock:
             st = self._streams[unit]
             st.t_done = time.monotonic()
-            dur = max(st.t_done - st.t_issue, 1e-9)
-            obs = st.nbytes / dur
-            self._bw = 0.7 * self._bw + 0.3 * obs
+            if observed:
+                dur = max(st.t_done - st.t_issue, 1e-9)
+                obs = st.nbytes / dur
+                self._bw = 0.7 * self._bw + 0.3 * obs
             if self._critical == unit:
                 self._critical = None
                 for other in self._streams.values():
                     other.gate.set()       # resume suspended streams
+
+    def on_error(self, unit: str):
+        """A stream failed: mark it done and lift any suspension so no
+        other reader stays parked on a cleared gate forever.  Without
+        this, a failed critical stream would leave ``_critical`` set
+        and every suspended stream — including one acting as the
+        node-local WeightCache's single-flight leader for a unit —
+        blocked indefinitely, wedging all future loads of that unit."""
+        with self._lock:
+            st = self._streams.get(unit)
+            if st is not None and st.t_done is None:
+                st.t_done = time.monotonic()
+            self._critical = None
+            for other in self._streams.values():
+                other.gate.set()
 
     # ---------------------------------------------------------- Algorithm 1
     def expected_completion(self, unit: str) -> float:
@@ -94,7 +125,7 @@ class PriorityAwareScheduler:
         with self._lock:
             st = self._streams.get(unit)
             if st is None or st.completed or st.t_issue == 0.0 or \
-                    self._critical == unit:
+                    st.external or self._critical == unit:
                 return None
             return max(0.0, self.expected_completion(unit) -
                        time.monotonic())
@@ -110,7 +141,8 @@ class PriorityAwareScheduler:
         now = time.monotonic()
         with self._lock:
             st = self._streams.get(unit)
-            if st is None or st.completed or st.t_issue == 0.0:
+            if st is None or st.completed or st.t_issue == 0.0 or \
+                    st.external:
                 return NORMAL
             if now >= self.expected_completion(unit):
                 for other in self._streams.values():       # O(n)

@@ -188,6 +188,7 @@ class DecoupledWeightUnit(PipelineUnit):
             cu = ctx.state.get(CONSTRUCTED, u)
             with ctx.trace.record("A", u):
                 params = ctx.apply_leaves(u, cu.abstract, dec.ready[u])
+            dec.checkin(u)      # application done: drop the cache pin
             ctx.trace.record_memory(u, cu.mem_bytes, cu.t_construct_end,
                                     time.monotonic())
             ctx.state.publish(APPLIED, u, params)

@@ -60,6 +60,10 @@ def main(argv=None):
                     help="router workers / max in-flight invocations")
     ap.add_argument("--max-instances", type=int, default=1,
                     help="instance-pool scale-out limit per model")
+    ap.add_argument("--cache-budget-mb", type=float, default=None,
+                    help="enable the node-local shared WeightCache with "
+                         "this byte budget (0 = unbounded; default: no "
+                         "cache)")
     ap.add_argument("--bandwidth-mbps", type=float, default=400.0)
     ap.add_argument("--store", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -84,9 +88,12 @@ def main(argv=None):
                              models=args.models, seed=args.seed)
     print("trace:", summarize(trace))
 
+    cache_budget = None if args.cache_budget_mb is None \
+        else int(args.cache_budget_mb * 1e6)
     platform = ServerlessPlatform(store, builders, strategy=args.strategy,
                                   keep_alive_s=args.keep_alive,
-                                  max_instances=args.max_instances)
+                                  max_instances=args.max_instances,
+                                  cache_budget_bytes=cache_budget)
 
     def make_batch(name):
         return example_batch(get_config(name, smoke=args.smoke))
@@ -116,6 +123,12 @@ def main(argv=None):
         print(f"pool[{name}]: instances={ps.size} live={ps.live} "
               f"cold={ps.cold_starts} warm={ps.warm_hits} "
               f"evictions={ps.evictions}")
+    cs = platform.cache_stats()
+    if cs is not None:
+        print(f"weight-cache: hits={cs.hits} misses={cs.misses} "
+              f"deduped-reads={cs.waits} evictions={cs.evictions} "
+              f"resident={cs.bytes_cached / 1e6:.1f}MB "
+              f"hit-rate={cs.hit_rate:.0%}")
     return responses
 
 

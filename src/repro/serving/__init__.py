@@ -6,6 +6,10 @@
   router   thread-safe Router: admission control, priority dispatch
   engine   ServerlessPlatform (trace replay on the Router) + LM server
   trace    bursty Azure-like invocation workload generator
+
+The node-local WeightCache (repro.store.cache) is re-exported here:
+one cache per platform makes scale-out cold starts reuse resident
+weights and single-flight store reads.
 """
 from repro.serving.api import (AdmissionError, PoolStats, Request,  # noqa: F401
                                RequestClass, Response, RouterStats)
@@ -15,3 +19,4 @@ from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401
 from repro.serving.router import Router  # noqa: F401
 from repro.serving.engine import (BatchedLMServer,  # noqa: F401
                                   ServerlessPlatform)
+from repro.store.cache import CacheStats, WeightCache  # noqa: F401

@@ -26,6 +26,7 @@ from repro.serving.api import Request, Response  # noqa: F401 (re-export)
 from repro.serving.policy import EvictionPolicy, make_policy
 from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401
 from repro.serving.router import Router
+from repro.store.cache import CacheStats, WeightCache
 from repro.store.store import WeightStore
 
 PyTree = Any
@@ -39,25 +40,45 @@ class ServerlessPlatform:
                  strategy: str = "cicada", keep_alive_s: float = 60.0,
                  io_workers: int = 4, chunk_bytes: int = 1 << 20,
                  max_instances: int = 1,
-                 policy: Optional[EvictionPolicy] = None):
-        """builders: model_name -> () -> (model, example_batch)."""
+                 policy: Optional[EvictionPolicy] = None,
+                 cache_budget_bytes: Optional[int] = None,
+                 cache: Optional[WeightCache] = None):
+        """builders: model_name -> () -> (model, example_batch).
+
+        cache_budget_bytes: enable ONE node-local WeightCache shared by
+        every pool — scale-out and re-triggered cold starts then reuse
+        already-resident unit leaves and single-flight store reads
+        (None -> no cache, seed behaviour; 0 -> unbounded).  Pass
+        ``cache`` to share an externally-owned cache instead (e.g. one
+        cache across several platforms on a node).
+        """
         self.store = store
         self.strategy = strategy
         self.policy = policy if policy is not None \
             else make_policy(keep_alive_s)
+        if cache is None and cache_budget_bytes is not None:
+            cache = WeightCache(cache_budget_bytes)
+        self.cache = cache
         self.pools: Dict[str, InstancePool] = {
             name: InstancePool(name, builder, store, strategy=strategy,
                                policy=self.policy,
                                max_instances=max_instances,
                                io_workers=io_workers,
-                               chunk_bytes=chunk_bytes)
+                               chunk_bytes=chunk_bytes,
+                               cache=self.cache)
             for name, builder in builders.items()}
         self.last_router_stats = None      # RouterStats of the last replay
 
     def router(self, *, workers: int = 4,
                max_pending: Optional[int] = None) -> Router:
         """A live Router over this platform's pools (caller shuts down)."""
-        return Router(self.pools, workers=workers, max_pending=max_pending)
+        return Router(self.pools, workers=workers, max_pending=max_pending,
+                      cache=self.cache)
+
+    def cache_stats(self) -> Optional[CacheStats]:
+        """Counters of the shared node-local WeightCache (None when
+        serving cache-less)."""
+        return self.cache.stats() if self.cache is not None else None
 
     def sweep(self, logical_now: float) -> int:
         """Run keep-alive eviction across all pools (idle instances

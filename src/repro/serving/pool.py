@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core.coldstart import ColdStartEngine, LoadResult
 from repro.serving.api import PoolStats
 from repro.serving.policy import EvictionPolicy, NeverEvict
+from repro.store.cache import WeightCache
 from repro.store.store import WeightStore
 
 PyTree = Any
@@ -45,13 +46,15 @@ class FunctionInstance:
     def __init__(self, model, model_name: str, store: WeightStore, *,
                  strategy: str = "cicada", io_workers: int = 4,
                  chunk_bytes: int = 1 << 20, warm: bool = True,
-                 example_batch: Optional[Dict[str, jax.Array]] = None):
+                 example_batch: Optional[Dict[str, jax.Array]] = None,
+                 cache: Optional[WeightCache] = None):
         self.model = model
         self.model_name = model_name
         self.engine = ColdStartEngine(model, model_name, store,
                                       strategy=strategy,
                                       io_workers=io_workers,
-                                      chunk_bytes=chunk_bytes)
+                                      chunk_bytes=chunk_bytes,
+                                      cache=cache)
         self.params: Optional[PyTree] = None
         self.last_load: Optional[LoadResult] = None
         self._fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
@@ -96,13 +99,18 @@ class InstancePool:
                  policy: Optional[EvictionPolicy] = None,
                  max_instances: int = 1, io_workers: int = 4,
                  chunk_bytes: int = 1 << 20,
-                 instance_factory: Optional[Callable[[], Any]] = None):
+                 instance_factory: Optional[Callable[[], Any]] = None,
+                 cache: Optional[WeightCache] = None):
         """builder: () -> (model, example_batch).  ``instance_factory``
         overrides container provisioning (tests / future remote pools);
-        the default builds a warmed FunctionInstance."""
+        the default builds a warmed FunctionInstance.  ``cache``: one
+        node-local WeightCache shared by every instance of this pool
+        (and, via the platform, across pools) — concurrent scale-out
+        cold starts then single-flight each unit's store read."""
         self.model_name = model_name
         self.policy = policy if policy is not None else NeverEvict()
         self.max_instances = max(1, int(max_instances))
+        self.cache = cache
         self._builder = builder
         self._store = store
         self._strategy = strategy
@@ -125,7 +133,8 @@ class InstancePool:
                                 strategy=self._strategy,
                                 io_workers=self._io_workers,
                                 chunk_bytes=self._chunk_bytes,
-                                example_batch=example)
+                                example_batch=example,
+                                cache=self.cache)
 
     # ------------------------------------------------------------ lifecycle
     def acquire(self, *, timeout: Optional[float] = None,

@@ -23,7 +23,7 @@ import itertools
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 from repro.serving.api import (AdmissionError, Request, RequestClass,
                                Response, RouterStats)
@@ -33,15 +33,21 @@ from repro.serving.pool import InstancePool
 class Router:
     def __init__(self, pools: Dict[str, InstancePool], *, workers: int = 4,
                  max_pending: Optional[int] = None,
-                 acquire_timeout_s: float = 0.1):
+                 acquire_timeout_s: float = 0.1,
+                 cache: Optional[Any] = None):
         """``acquire_timeout_s``: how long a worker may block on a
         saturated pool before requeueing the request (to the tail of
         its class) and serving other queued work — keeps a slow cold
         pool from absorbing the whole worker pool and starving
-        higher-priority inference requests."""
+        higher-priority inference requests.
+
+        ``cache``: the node-local WeightCache behind this router's
+        pools, exposed for observability (``cache_stats``); the pools
+        themselves consult it during cold starts."""
         self.pools = pools
         self.max_pending = max_pending
         self.acquire_timeout_s = acquire_timeout_s
+        self.cache = cache
         self.stats = RouterStats()
         self._cv = threading.Condition()
         self._heap: list = []              # (class, seq, Request, Future)
@@ -142,6 +148,11 @@ class Router:
             if inst is not None:
                 pool.release(inst, logical_now=req.t_logical)
             fut.set_exception(e)
+
+    def cache_stats(self):
+        """CacheStats of the attached node-local WeightCache (None when
+        serving cache-less)."""
+        return self.cache.stats() if self.cache is not None else None
 
     # ------------------------------------------------------------- shutdown
     def shutdown(self, wait: bool = True):

@@ -1,0 +1,235 @@
+"""Node-local shared WeightCache: deserialized unit leaves, reused
+across cold starts.
+
+Under scale-out (PR 1's ``InstancePool``) every instance of the same
+model re-read its full weight extents from the store — the dominant
+cold-start cost paid N times on one node.  Fast serverless scaling
+hinges on reusing already-resident weights across instances (λScale,
+HydraServe); this cache is that reuse point:
+
+  * **keyed by (model, unit)** — the store's retrieval granularity, so
+    a partially-loaded model already serves hits to a concurrent load;
+  * **single-flight** — the first loader of a unit reads from the
+    store, every concurrent loader blocks on the shared condition
+    variable and receives the leader's leaves: one physical read per
+    unit, node-wide, no matter how many instances cold-start at once;
+  * **byte-budgeted, priority-aware eviction** — LRU over unpinned
+    entries, and units of models with a load currently in flight are
+    spared outright (coordinated with the cold-start pipeline: the
+    WeightDecoupler registers its load and pins each unit from
+    retrieval until weight application, so a unit needed by an
+    in-flight — possibly Algorithm-1-critical — load is never evicted
+    under pressure; the budget is re-enforced when loads retire);
+  * **refcounted pins** — ``begin``/``complete`` take a reference,
+    ``release`` drops it; pinned entries are never evicted (the budget
+    may transiently overshoot while pins are held — pins are the
+    short retrieval→application window of a load).
+
+Entries hold the *deserialized* leaf dict exactly as
+``WeightStore.deserialize`` returns it (quantized leaves stay
+quantized: dequantization remains the per-load weight-application
+compute phase, so a cache hit skips I/O + deserialize + crc, not the
+paper's decoupled compute stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+# begin() outcomes
+HIT = "hit"      # leaves returned, reference taken
+LOAD = "load"    # caller is the leader: read the store, then complete()/abort()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Point-in-time + cumulative counters (thread-safe snapshot)."""
+    budget_bytes: Optional[int]
+    bytes_cached: int = 0
+    entries: int = 0
+    pinned: int = 0
+    hits: int = 0            # begin() served from cache (incl. after a wait)
+    misses: int = 0          # begin() promoted the caller to leader
+    waits: int = 0           # hits that waited on another loader (deduped I/O)
+    inserts: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class _Entry:
+    __slots__ = ("leaves", "nbytes", "refs", "loading")
+
+    def __init__(self):
+        self.leaves: Any = None
+        self.nbytes = 0
+        self.refs = 0
+        self.loading = True
+
+
+class WeightCache:
+    """Thread-safe node-level cache of deserialized unit leaves.
+
+    ``budget_bytes=None`` (or ``0``) means unbounded; a positive
+    integer bounds the bytes of *unpinned* residency (pinned entries
+    and in-flight models may transiently overshoot).
+    """
+
+    def __init__(self, budget_bytes: Optional[int] = None):
+        if budget_bytes is not None and budget_bytes < 0:
+            raise ValueError("budget_bytes must be >= 0 or None")
+        # 0 -> unbounded, matching the platform's cache_budget_bytes
+        # knob (a literal zero-byte cache would evict every entry on
+        # insert — never what a caller wants from "enable the cache")
+        self.budget_bytes = budget_bytes or None
+        self._cv = threading.Condition()
+        self._entries: "OrderedDict[Tuple[str, str], _Entry]" = OrderedDict()
+        self._bytes = 0
+        self._inflight: Dict[str, int] = {}      # model -> active loads
+        self._hits = 0
+        self._misses = 0
+        self._waits = 0
+        self._inserts = 0
+        self._evictions = 0
+
+    # --------------------------------------------------------- load protocol
+    def begin(self, model: str, unit: str) -> Tuple[str, Any]:
+        """Enter the single-flight protocol for one unit.
+
+        Returns ``(HIT, leaves)`` — a reference is taken; call
+        :meth:`release` after the weight-application phase — or
+        ``(LOAD, None)`` — the caller is the leader and must read the
+        store, then call :meth:`complete` (which also takes the
+        leader's reference) or :meth:`abort` on failure.  Concurrent
+        callers of a loading unit block here and are served the
+        leader's result (or promoted to leader if it aborts).
+        """
+        key = (model, unit)
+        waited = False
+        with self._cv:
+            while True:
+                e = self._entries.get(key)
+                if e is None:
+                    e = _Entry()
+                    self._entries[key] = e
+                    self._misses += 1
+                    return LOAD, None
+                if e.loading:
+                    waited = True
+                    self._cv.wait()
+                    continue
+                e.refs += 1
+                self._entries.move_to_end(key)
+                self._hits += 1
+                if waited:
+                    self._waits += 1
+                return HIT, e.leaves
+
+    def complete(self, model: str, unit: str, leaves: Any, nbytes: int):
+        """Publish the leader's read; wakes all waiters.  The leader
+        keeps one reference (release after application)."""
+        key = (model, unit)
+        with self._cv:
+            e = self._entries.get(key)
+            if e is None or not e.loading:
+                raise RuntimeError(f"complete() without begin(): {key}")
+            e.leaves = leaves
+            e.nbytes = int(nbytes)
+            e.refs = 1
+            e.loading = False
+            self._bytes += e.nbytes
+            self._inserts += 1
+            self._entries.move_to_end(key)
+            self._evict_locked()
+            self._cv.notify_all()
+
+    def abort(self, model: str, unit: str):
+        """Leader failed: drop the placeholder so a waiter retries as
+        the new leader."""
+        with self._cv:
+            e = self._entries.get((model, unit))
+            if e is not None and e.loading:
+                del self._entries[(model, unit)]
+            self._cv.notify_all()
+
+    def release(self, model: str, unit: str):
+        """Drop one reference taken by begin()/complete()."""
+        with self._cv:
+            e = self._entries.get((model, unit))
+            if e is None or e.loading:
+                return
+            e.refs = max(0, e.refs - 1)
+            self._evict_locked()
+
+    # --------------------------------------------- in-flight load registry
+    def register_load(self, model: str):
+        """A cold-start load of ``model`` is in flight: its cached
+        units are spared by eviction until idle models' units are gone."""
+        with self._cv:
+            self._inflight[model] = self._inflight.get(model, 0) + 1
+
+    def unregister_load(self, model: str):
+        with self._cv:
+            n = self._inflight.get(model, 0) - 1
+            if n > 0:
+                self._inflight[model] = n
+            else:
+                self._inflight.pop(model, None)
+            self._evict_locked()
+
+    # -------------------------------------------------------------- eviction
+    def _evict_locked(self):
+        """LRU over evictable entries.  Never touched: loading slots,
+        pinned entries (refs > 0), and units of models with a
+        registered in-flight load — the budget may transiently
+        overshoot while pins/loads are held; it is re-enforced on
+        release()/unregister_load()."""
+        if self.budget_bytes is None:
+            return
+        for key in list(self._entries):
+            if self._bytes <= self.budget_bytes:
+                return
+            e = self._entries[key]
+            if e.loading or e.refs > 0 or key[0] in self._inflight:
+                continue
+            del self._entries[key]
+            self._bytes -= e.nbytes
+            self._evictions += 1
+
+    # --------------------------------------------------------------- queries
+    def __contains__(self, key: Tuple[str, str]) -> bool:
+        with self._cv:
+            e = self._entries.get(key)
+            return e is not None and not e.loading
+
+    def cached_units(self, model: str) -> List[str]:
+        with self._cv:
+            return [u for (m, u), e in self._entries.items()
+                    if m == model and not e.loading]
+
+    def stats(self) -> CacheStats:
+        with self._cv:
+            return CacheStats(
+                budget_bytes=self.budget_bytes,
+                bytes_cached=self._bytes,
+                entries=sum(1 for e in self._entries.values()
+                            if not e.loading),
+                pinned=sum(1 for e in self._entries.values()
+                           if not e.loading and e.refs > 0),
+                hits=self._hits, misses=self._misses, waits=self._waits,
+                inserts=self._inserts, evictions=self._evictions)
+
+    def clear(self):
+        """Drop every unpinned, non-loading entry (tests / redeploys)."""
+        with self._cv:
+            for key in list(self._entries):
+                e = self._entries[key]
+                if e.loading or e.refs > 0:
+                    continue
+                del self._entries[key]
+                self._bytes -= e.nbytes

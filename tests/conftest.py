@@ -25,6 +25,38 @@ except ImportError:
     ]
 
 
+# ---------------------------------------------------------------------------
+# known-drift quarantine (PR 2): tests/known_drift.txt lists pre-existing
+# failures by `<file basename>::<test name>`.  They get the `known_drift`
+# marker and — unless REPRO_DRIFT_STRICT=1 (the non-blocking CI job that
+# reports their true state) — a non-strict xfail, so the blocking tier-1
+# run stays green without deleting the tests.
+# ---------------------------------------------------------------------------
+
+def _known_drift_entries():
+    path = os.path.join(os.path.dirname(__file__), "known_drift.txt")
+    try:
+        with open(path) as f:
+            return {ln.strip() for ln in f
+                    if ln.strip() and not ln.lstrip().startswith("#")}
+    except OSError:
+        return set()
+
+
+def pytest_collection_modifyitems(config, items):
+    drift = _known_drift_entries()
+    strict = os.environ.get("REPRO_DRIFT_STRICT") == "1"
+    for item in items:
+        base = os.path.basename(item.fspath.strpath) + "::" + \
+            item.name.split("[")[0]
+        if base in drift:
+            item.add_marker(pytest.mark.known_drift)
+            if not strict:
+                item.add_marker(pytest.mark.xfail(
+                    reason="known drift (tests/known_drift.txt)",
+                    strict=False))
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

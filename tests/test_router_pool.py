@@ -245,6 +245,7 @@ def _fake_platform(policy=None, *, max_instances=1, load_s=0.2,
     from repro.serving.engine import ServerlessPlatform
     platform = ServerlessPlatform.__new__(ServerlessPlatform)
     platform.policy = policy if policy is not None else NeverEvict()
+    platform.cache = None
     platform.pools = {"m": fake_pool(max_instances=max_instances,
                                      policy=platform.policy,
                                      load_s=load_s, registry=registry)}

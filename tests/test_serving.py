@@ -26,6 +26,7 @@ def deployed(tmp_path_factory):
     return store, m, cfg, batch
 
 
+@pytest.mark.slow
 def test_cold_then_warm(deployed):
     store, m, cfg, batch = deployed
     inst = FunctionInstance(m, "smollm-360m", store, strategy="cicada",
@@ -39,6 +40,7 @@ def test_cold_then_warm(deployed):
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_eviction_forces_cold_start(deployed):
     store, m, cfg, batch = deployed
     inst = FunctionInstance(m, "smollm-360m", store, example_batch=batch)
@@ -50,6 +52,7 @@ def test_eviction_forces_cold_start(deployed):
     assert info["cold"]
 
 
+@pytest.mark.slow
 def test_platform_trace_replay(deployed):
     store, m, cfg, batch = deployed
     builders = {"smollm-360m": lambda: (m, batch)}
@@ -63,6 +66,7 @@ def test_platform_trace_replay(deployed):
     assert all(r.latency_s > 0 for r in out)
 
 
+@pytest.mark.slow
 def test_platform_concurrent_replay(deployed):
     """run_trace(concurrency=4): concurrent cold starts scale the pool
     out, responses keep trace order and gain queueing delay."""
@@ -99,6 +103,7 @@ def test_trace_generator_statistics():
     assert [(i.t, i.model) for i in tr] == [(i.t, i.model) for i in tr2]
 
 
+@pytest.mark.slow
 def test_batched_decode_matches_stepwise_forward():
     """Greedy generation through the server == argmax over full forwards."""
     import dataclasses

@@ -1,0 +1,321 @@
+"""Node-local shared WeightCache: budget-bounded eviction order,
+refcount pinning, single-flight under concurrent scale-out (exactly
+one store read per unit), and cache-hit cold starts with ~zero
+retrieval time."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.store.cache import HIT, LOAD, WeightCache
+
+
+# ---------------------------------------------------------------------------
+# cache unit behaviour (no jax, no store)
+# ---------------------------------------------------------------------------
+
+def _put(c, model, unit, nbytes, value=None):
+    status, _ = c.begin(model, unit)
+    assert status == LOAD
+    c.complete(model, unit, value if value is not None else {unit: nbytes},
+               nbytes)
+    c.release(model, unit)          # drop the loader's pin
+
+
+def test_budget_bounded_lru_eviction_order():
+    c = WeightCache(budget_bytes=250)
+    _put(c, "m", "u0", 100)
+    _put(c, "m", "u1", 100)
+    assert ("m", "u0") in c and ("m", "u1") in c
+    # refresh u0's recency: u1 is now the LRU victim
+    s, _ = c.begin("m", "u0")
+    assert s == HIT
+    c.release("m", "u0")
+    _put(c, "m", "u2", 100)        # 300 > 250 -> one eviction
+    st = c.stats()
+    assert st.bytes_cached <= 250
+    assert st.evictions == 1
+    assert ("m", "u1") not in c            # LRU evicted first
+    assert ("m", "u0") in c and ("m", "u2") in c
+
+
+def test_refcount_pin_survives_budget_pressure():
+    c = WeightCache(budget_bytes=100)
+    status, _ = c.begin("m", "pinned")
+    assert status == LOAD
+    c.complete("m", "pinned", {"w": 1}, 80)   # loader's pin still held
+    _put(c, "m", "other", 80)                 # over budget
+    assert ("m", "pinned") in c               # in-use unit survives pressure
+    assert ("m", "other") not in c            # the unpinned one paid
+    c.release("m", "pinned")
+    _put(c, "m", "next", 80)                  # pin dropped -> now evictable
+    assert ("m", "pinned") not in c
+
+
+def test_inflight_model_units_evicted_last():
+    """Priority-aware order: units of a model with a registered
+    in-flight load are spared until idle models' units are gone."""
+    c = WeightCache(budget_bytes=150)
+    _put(c, "busy", "u0", 100)
+    c.register_load("busy")
+    _put(c, "idle", "u0", 100)     # over budget: "idle" evicted, not "busy"
+    assert ("busy", "u0") in c
+    assert ("idle", "u0") not in c
+    c.unregister_load("busy")      # protection lapses -> budget re-enforced
+    _put(c, "idle2", "u0", 100)
+    assert ("busy", "u0") not in c
+
+
+def test_single_flight_one_leader_many_waiters():
+    c = WeightCache(None)
+    outcomes = []
+    release = threading.Event()
+
+    def leader():
+        status, _ = c.begin("m", "u")
+        assert status == LOAD
+        release.wait(5.0)
+        c.complete("m", "u", {"w": 42}, 10)
+
+    def follower():
+        status, leaves = c.begin("m", "u")
+        outcomes.append((status, leaves))
+
+    tl = threading.Thread(target=leader)
+    tl.start()
+    time.sleep(0.02)               # leader holds the LOAD slot
+    ts = [threading.Thread(target=follower) for _ in range(4)]
+    for t in ts:
+        t.start()
+    time.sleep(0.02)
+    assert not outcomes            # followers block on the leader
+    release.set()
+    tl.join(5.0)
+    for t in ts:
+        t.join(5.0)
+    assert outcomes == [(HIT, {"w": 42})] * 4
+    st = c.stats()
+    assert st.misses == 1 and st.hits == 4 and st.waits == 4
+
+
+def test_aborted_leader_promotes_a_waiter():
+    c = WeightCache(None)
+    got = {}
+
+    def follower():
+        status, _ = c.begin("m", "u")
+        got["status"] = status
+
+    status, _ = c.begin("m", "u")
+    assert status == LOAD
+    t = threading.Thread(target=follower)
+    t.start()
+    time.sleep(0.02)
+    c.abort("m", "u")              # leader's read failed
+    t.join(5.0)
+    assert got["status"] == LOAD   # waiter retries as the new leader
+    c.complete("m", "u", {"w": 1}, 4)
+    assert ("m", "u") in c
+
+
+def test_stats_snapshot_and_clear():
+    c = WeightCache(budget_bytes=1000)
+    _put(c, "m", "u0", 100)
+    s, _ = c.begin("m", "u0")
+    assert s == HIT
+    st = c.stats()
+    assert st.entries == 1 and st.pinned == 1
+    assert st.hit_rate == pytest.approx(0.5)
+    c.clear()
+    assert ("m", "u0") in c        # pinned entries survive clear()
+    c.release("m", "u0")
+    c.clear()
+    assert ("m", "u0") not in c
+    assert c.stats().bytes_cached == 0
+
+
+# ---------------------------------------------------------------------------
+# integration: cold starts through the engine / pool share one cache
+# ---------------------------------------------------------------------------
+
+class CountingStore:
+    """WeightStore wrapper counting physical read_unit calls."""
+
+    def __new__(cls, *a, **kw):
+        from repro.store.store import WeightStore
+
+        class _Counting(WeightStore):
+            def __init__(self, *args, **kwargs):
+                super().__init__(*args, **kwargs)
+                self.reads = 0
+                self._read_lock = threading.Lock()
+
+            def read_unit(self, *args, **kwargs):
+                with self._read_lock:
+                    self.reads += 1
+                return super().read_unit(*args, **kwargs)
+
+        return _Counting(*a, **kw)
+
+
+@pytest.fixture(scope="module")
+def deployed(tmp_path_factory):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer
+    from repro.models.api import get_config
+    from repro.store.store import BandwidthModel, deploy_model
+
+    d = tmp_path_factory.mktemp("store")
+    cfg = get_config("smollm-360m", smoke=True)
+    m = transformer.build(cfg)
+    store = CountingStore(str(d), BandwidthModel(bandwidth_mbps=150,
+                                                 latency_ms=0.3))
+    deploy_model(store, m, "m", jax.random.key(3))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 8)),
+        jnp.int32)}
+    return store, m, batch
+
+
+def _engine(store, m, batch, cache):
+    from repro.core import ColdStartEngine
+    eng = ColdStartEngine(m, "m", store, strategy="cicada",
+                          chunk_bytes=1 << 15, cache=cache)
+    eng.warmup(batch)
+    return eng
+
+
+def test_second_cold_start_zero_reads_and_zero_retrieval(deployed):
+    """Acceptance: with a shared WeightCache and sufficient budget, the
+    second cold start of the same model performs zero WeightStore
+    read_unit calls, and its trace records ~zero retrieval time."""
+    store, m, batch = deployed
+    cache = WeightCache(None)
+    n_units = len(m.unit_names())
+
+    store.reads = 0
+    r1 = _engine(store, m, batch, cache).load(batch)
+    assert store.reads == n_units
+
+    r2 = _engine(store, m, batch, cache).load(batch)
+    assert store.reads == n_units          # zero additional reads
+    R = r2.trace.events_for("R")
+    assert set(R) == set(m.unit_names())
+    assert all(e.meta and e.meta.get("cached") for e in R.values())
+    # ~zero retrieval: cumulative R work is dwarfed by the cold read
+    r1_R = sum(e.duration for e in r1.trace.events_for("R").values())
+    assert sum(e.duration for e in R.values()) < max(0.01, 0.05 * r1_R)
+    np.testing.assert_allclose(np.asarray(r2.logits, np.float32),
+                               np.asarray(r1.logits, np.float32),
+                               atol=1e-4, rtol=1e-4)
+    # pins were all checked in after application
+    assert cache.stats().pinned == 0
+
+
+def test_concurrent_scale_out_single_flights_reads(deployed):
+    """Two simultaneous cold starts of one model: exactly one store
+    read per unit node-wide (the second loader waits on the shared CV
+    instead of duplicating I/O), identical logits from both."""
+    store, m, batch = deployed
+    cache = WeightCache(None)
+    n_units = len(m.unit_names())
+    engines = [_engine(store, m, batch, cache) for _ in range(2)]
+    store.reads = 0
+    out = [None, None]
+
+    def go(i):
+        out[i] = engines[i].load(batch)
+
+    ts = [threading.Thread(target=go, args=(i,)) for i in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(60.0)
+    assert all(o is not None for o in out)
+    assert store.reads == n_units          # exactly one read per unit
+    st = cache.stats()
+    assert st.misses == n_units
+    assert st.hits + st.misses == 2 * n_units
+    np.testing.assert_allclose(np.asarray(out[0].logits, np.float32),
+                               np.asarray(out[1].logits, np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pool_scale_out_shares_platform_cache(deployed):
+    """InstancePool wiring: instances provisioned by the pool inherit
+    the shared cache, so a scale-out cold start is served without
+    re-reading the store."""
+    store, m, batch = deployed
+    from repro.serving.pool import InstancePool
+
+    cache = WeightCache(None)
+    n_units = len(m.unit_names())
+    pool = InstancePool("m", lambda: (m, batch), store, strategy="cicada",
+                        max_instances=2, chunk_bytes=1 << 15, cache=cache)
+    i1 = pool.acquire()
+    i2 = pool.acquire()            # scale-out: second container
+    store.reads = 0
+    i1.invoke(batch)               # cold: reads every unit
+    assert store.reads == n_units
+    i2.invoke(batch)               # cold, but cache-warm: zero reads
+    assert store.reads == n_units
+    pool.release(i1, logical_now=0.0, cold=True)
+    pool.release(i2, logical_now=0.0, cold=True)
+    assert pool.stats().cold_starts == 2
+
+
+def test_failed_load_does_not_poison_shared_cache(deployed):
+    """A cold start whose store read raises must leave the shared
+    cache healthy: no wedged loading slots (a later begin() is
+    promoted to leader instead of blocking), no leaked pins, and the
+    in-flight-load eviction protection lapses."""
+    store, m, batch = deployed
+    from repro.core import ColdStartEngine
+
+    cache = WeightCache(None)
+    bad_unit = m.unit_names()[2]
+    orig = type(store).read_unit
+
+    def failing_read(self, model_name, unit, **kw):
+        if unit == bad_unit:
+            raise IOError("injected read failure")
+        return orig(self, model_name, unit, **kw)
+
+    type(store).read_unit = failing_read
+    try:
+        eng = ColdStartEngine(m, "m", store, strategy="cicada",
+                              chunk_bytes=1 << 15, cache=cache)
+        with pytest.raises(IOError, match="injected"):
+            eng.load(batch)
+    finally:
+        type(store).read_unit = orig
+    assert cache.stats().pinned == 0       # shutdown swept the pins
+    # the failed unit's slot was aborted: a fresh begin() leads, fast
+    done = {}
+
+    def probe():
+        done["status"], _ = cache.begin("m", bad_unit)
+
+    t = threading.Thread(target=probe)
+    t.start()
+    t.join(5.0)
+    assert not t.is_alive(), "begin() wedged on a dead leader"
+    assert done["status"] == LOAD
+    cache.abort("m", bad_unit)
+    # shutdown released the in-flight registration: eviction protection
+    # for this model's units has lapsed
+    assert cache._inflight == {}
+
+
+def test_cache_less_engine_unchanged(deployed):
+    """No cache (seed behaviour): every cold start re-reads."""
+    store, m, batch = deployed
+    n_units = len(m.unit_names())
+    eng = _engine(store, m, batch, None)
+    store.reads = 0
+    eng.load(batch)
+    eng2 = _engine(store, m, batch, None)
+    eng2.load(batch)
+    assert store.reads == 2 * n_units
