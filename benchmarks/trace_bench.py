@@ -2,23 +2,35 @@
 per-strategy mean latency under the bursty Azure-like workload, plus
 
   * a concurrency sweep (serial seed-style replay vs ≥4 in-flight
-    requests through the Router's worker pool), and
+    requests through the Router's worker pool),
   * a scale-out sweep for the node-local WeightCache: cold-baseline vs
     warm-cache cold-start latency, and single-flight reads under
-    concurrent scale-out of one model.
+    concurrent scale-out of one model, and
+  * ``--workload generate``: the generation-first serving path —
+    TTFT p50/p99, TPOT and aggregate tokens/s at concurrency {1, 4, 8}
+    through one instance's continuous-batching DecodeScheduler, against
+    a serial per-request prefill+decode baseline; plus a cold
+    generation request whose first token must land inside the loading
+    pipeline (before the final E event completes).
 
 Run directly for CI's bench-smoke job:
 
     PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
         --invocations 8 --json-out BENCH_trace.json
+    PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
+        --workload generate --models smollm-360m \
+        --json-out BENCH_generate.json
 """
 from __future__ import annotations
 
 import json
+import time
 
 import numpy as np
 
 from benchmarks import common
+from repro.serving.api import GenerateSpec, Request
+from repro.serving.decode import reference_generate
 from repro.serving.engine import ServerlessPlatform
 from repro.serving.trace import Invocation, azure_like_trace, summarize
 
@@ -87,10 +99,130 @@ def scaleout_sweep(store, models, args, *, n_instances=2):
     return rows
 
 
+def generate_run(args):
+    """--workload generate: TTFT / TPOT / tokens-per-second rows.
+
+    Rows (name, value, derived):
+      generate/cold/ttft_ms            TTFT of a cold generation request;
+                                       derived = load_s (ms) — TTFT must
+                                       be smaller: first token produced
+                                       inside the pipeline
+      generate/cold/ttft_before_final_E 1.0 when the first-token
+                                       timestamp precedes the final E
+                                       event's completion in the trace
+      generate/serial/tok_s            per-request serial prefill+decode
+                                       baseline (reference_generate)
+      generate/conc{N}/tok_s           aggregate through the Router at
+                                       concurrency N, one instance
+                                       (continuous batching); derived =
+                                       max slot occupancy reached
+      generate/conc{N}/ttft_p50_ms, ttft_p99_ms, tpot_ms
+      generate/conc8/speedup_vs_serial aggregate tokens/s ratio
+    """
+    rows = []
+    name = args.models[0]
+    cfg, model = common.get_model(name, args.quick)
+    if not hasattr(model, "decode_step"):
+        raise SystemExit(
+            f"--workload generate needs a decoder LM, got {name!r} "
+            f"({cfg.family.value}); try --models smollm-360m")
+    store, _ = common.deployed_store(args)
+    common.ensure_deployed(store, name, args.quick)
+    # enough decode steps for batching to amortize per-request
+    # prefill/join overhead (short runs understate the steady state)
+    n_new = args.n_new or (16 if args.quick else 32)
+    prompt_len = args.prompt_len
+    cache_len = max(64, prompt_len + n_new)
+    rng = np.random.default_rng(0)
+
+    def spec(i=0):
+        return GenerateSpec(
+            prompt=rng.integers(0, cfg.vocab_size,
+                                (prompt_len,)).astype(np.int32),
+            n_new=n_new, seed=i)
+
+    def build_platform():
+        return ServerlessPlatform(
+            store, {name: (lambda: (model, common.make_batch(cfg)))},
+            strategy="cicada", keep_alive_s=1e9, max_instances=1,
+            gen_slots=8, gen_cache_len=cache_len)
+
+    # ---- cold generation: TTFT inside the loading pipeline ----------------
+    platform = build_platform()
+    router = platform.router(workers=1)
+    try:
+        cold = router.submit(Request(req_id=0, model=name,
+                                     gen=spec())).result()
+    finally:
+        router.shutdown()
+    assert cold.cold
+    inst = platform.pools[name]._instances[0]
+    trace = inst.last_load.trace
+    final_e_end = max(e.t_end for e in trace.events if e.stage == "E")
+    # first-token absolute time = service start + ttft
+    t_first_abs = cold.t_arrival + cold.ttft_s
+    rows.append(["generate/cold/ttft_ms", cold.ttft_s * 1e3,
+                 cold.load_s * 1e3])
+    rows.append(["generate/cold/ttft_before_final_E",
+                 float(t_first_abs <= final_e_end), 0.0])
+    params = inst.params
+
+    # ---- serial per-request baseline (B=1 prefill + decode loop) ----------
+    n_req = args.gen_requests or (8 if args.quick else 16)
+    reference_generate(model, params, spec(0).prompt, n_new=n_new,
+                       cache_len=cache_len)          # jit warm
+    t0 = time.monotonic()
+    for i in range(n_req):
+        reference_generate(model, params, spec(i).prompt, n_new=n_new,
+                           cache_len=cache_len)
+    serial_tok_s = n_req * n_new / (time.monotonic() - t0)
+    rows.append(["generate/serial/tok_s", serial_tok_s, float(n_req)])
+
+    # ---- continuous batching through the Router at concurrency {1,4,8} ----
+    conc_tok_s = {}
+    for conc in (1, 4, 8):
+        router = platform.router(workers=conc)
+        try:
+            # warm the step/prefill compiles outside the timed window
+            router.submit(Request(req_id=-1, model=name,
+                                  gen=spec())).result()
+            # report THIS level's peak occupancy, not the lifetime max
+            inst.scheduler.reset_peaks()
+            t0 = time.monotonic()
+            futs = [router.submit(Request(req_id=i, model=name,
+                                          gen=spec(i)))
+                    for i in range(n_req)]
+            rs = [f.result() for f in futs]
+            wall = time.monotonic() - t0
+        finally:
+            router.shutdown()
+        n_tok = sum(r.n_generated for r in rs)
+        ttft = np.array([r.ttft_s for r in rs])
+        tpot = np.concatenate([r.tpot_s for r in rs])
+        occ = inst.scheduler.stats()["max_occupancy"]
+        conc_tok_s[conc] = n_tok / wall
+        rows.append([f"generate/conc{conc}/tok_s", n_tok / wall,
+                     float(occ)])
+        rows.append([f"generate/conc{conc}/ttft_p50_ms",
+                     np.percentile(ttft, 50) * 1e3, 0.0])
+        rows.append([f"generate/conc{conc}/ttft_p99_ms",
+                     np.percentile(ttft, 99) * 1e3, 0.0])
+        rows.append([f"generate/conc{conc}/tpot_ms",
+                     tpot.mean() * 1e3, 0.0])
+    rows.append(["generate/conc8/speedup_vs_serial",
+                 conc_tok_s[8] / serial_tok_s, 0.0])
+    return rows
+
+
 def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
         concurrencies=(1, 4)):
     args = args or common.std_parser(models=["resnet50"]).parse_args([])
     n_invocations = getattr(args, "invocations", None) or n_invocations
+    if getattr(args, "workload", "trace") == "generate":
+        rows = generate_run(args)
+        common.print_csv(["name", "value", "derived"], rows)
+        _write_json(args, rows, "generate")
+        return rows
     rows = []
     store, _ = common.deployed_store(args)
     models = common.model_list(args)
@@ -126,14 +258,19 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
     # scale-out sweep: node-local WeightCache, cold vs warm-cache
     rows.extend(scaleout_sweep(store, models, args))
     common.print_csv(["name", "us_per_call", "derived"], rows)
+    _write_json(args, rows, "trace")
+    return rows
+
+
+def _write_json(args, rows, bench: str):
     json_out = getattr(args, "json_out", None)
     if json_out:
+        header = ["name", "value", "derived"] if bench == "generate" \
+            else ["name", "us_per_call", "derived"]
         with open(json_out, "w") as f:
-            json.dump({"bench": "trace",
-                       "header": ["name", "us_per_call", "derived"],
-                       "rows": rows}, f, indent=2)
+            json.dump({"bench": bench, "header": header, "rows": rows},
+                      f, indent=2)
         print(f"# wrote {json_out}")
-    return rows
 
 
 def main(argv=None):
@@ -142,6 +279,19 @@ def main(argv=None):
                     help="trace length (default 24)")
     ap.add_argument("--json-out", default=None,
                     help="also write rows as JSON (CI artifact)")
+    ap.add_argument("--workload", default="trace",
+                    choices=["trace", "generate"],
+                    help="trace: one-shot replay benches (default); "
+                         "generate: continuous-batching TTFT/TPOT/"
+                         "tokens-per-second benches (LM model required, "
+                         "e.g. --models smollm-360m)")
+    ap.add_argument("--n-new", type=int, default=None,
+                    help="tokens per generation request "
+                         "(default: 16 quick / 32 full)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-requests", type=int, default=None,
+                    help="generation requests per concurrency level "
+                         "(default: 8 quick / 16 full)")
     return run(ap.parse_args(argv))
 
 

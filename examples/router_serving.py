@@ -1,7 +1,10 @@
 """Concurrent serving through the Router/InstancePool API (deliverable
 of the serving-surface redesign): submit overlapping invocations of a
 cold model, watch the pool scale out, keep-alive reclaim instances, and
-the router dispatch inference-first.
+the router dispatch inference-first — then the generation-first path:
+overlapping GenerateSpec requests join one instance's
+continuous-batching decode scheduler (a cold generation request's first
+token is sampled inside the loading pipeline).
 
     PYTHONPATH=src python examples/router_serving.py
 """
@@ -16,8 +19,8 @@ sys.path.insert(0, "src")
 
 from repro.models import transformer                       # noqa: E402
 from repro.models.api import get_config                    # noqa: E402
-from repro.serving import (InstancePool, KeepAliveTTL,     # noqa: E402
-                           Request, Router)
+from repro.serving import (GenerateSpec, InstancePool,     # noqa: E402
+                           KeepAliveTTL, Request, Router)
 from repro.store.store import (BandwidthModel, WeightStore,  # noqa: E402
                                deploy_model)
 
@@ -56,6 +59,29 @@ def main():
     # keep-alive: 31 s of idleness (logical clock) reclaims both
     n = pool.sweep(31.0)
     print(f"swept after 31 s idle: {n} evicted -> live={pool.stats().live}")
+
+    # ---- generation-first path -------------------------------------------
+    # Both instances were just evicted, so the first generation request
+    # is cold: its first token is sampled inside the loading pipeline
+    # (ttft < load time).  The following requests join the instance's
+    # continuous decode batch instead of waiting for each other.
+    rng = np.random.default_rng(1)
+    with Router({"demo": pool}, workers=4) as router:
+        futs = [router.submit(Request(
+                    req_id=i, model="demo",
+                    gen=GenerateSpec(
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            (16,)).astype(np.int32),
+                        n_new=12)))
+                for i in range(4)]
+        for f in futs:
+            r = f.result()
+            tpot = 1e3 * sum(r.tpot_s) / max(len(r.tpot_s), 1)
+            print(f"gen {r.req_id}: {'COLD' if r.cold else 'warm'}  "
+                  f"ttft={r.ttft_s * 1e3:7.1f}ms  tpot={tpot:5.1f}ms  "
+                  f"tokens={list(r.tokens)[:6]}...")
+    inst = next(i for i in pool._instances if i.scheduler is not None)
+    print("decode scheduler:", inst.scheduler.stats())
 
 
 if __name__ == "__main__":

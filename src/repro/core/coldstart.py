@@ -126,8 +126,15 @@ class ColdStartEngine:
 
     # ----------------------------------------------------------------- load
     def load(self, batch: Dict[str, jax.Array], *,
-             key: Optional[jax.Array] = None) -> LoadResult:
-        """Serve one cold-start request end-to-end."""
+             key: Optional[jax.Array] = None,
+             on_logits: Optional[Any] = None) -> LoadResult:
+        """Serve one cold-start request end-to-end.
+
+        on_logits: called with the request's logits the moment the
+        final unit's E completes (inside the pipeline, before drain +
+        assemble) — the generation path samples the first token here so
+        a cold generation request's TTFT lands within the pipeline
+        trace instead of after load + a separate prefill."""
         strat = self.strategy
         model = self.model
         units = model.unit_names()
@@ -146,10 +153,10 @@ class ColdStartEngine:
         try:
             if not strat.pipelined:
                 result = self._load_traditional(batch, units, keys, trace,
-                                                dec)
+                                                dec, on_logits)
             else:
                 result = self._load_pipelined(batch, units, keys, trace, dec,
-                                              scheduler, state)
+                                              scheduler, state, on_logits)
         finally:
             # shutdown now guards shared-cache invariants (pin sweep +
             # unregister_load), so it must run on the failure path too
@@ -158,7 +165,8 @@ class ColdStartEngine:
         return result
 
     # ------------------------------------------------- traditional (Fig. 1)
-    def _load_traditional(self, batch, units, keys, trace, dec) -> LoadResult:
+    def _load_traditional(self, batch, units, keys, trace, dec,
+                          on_logits=None) -> LoadResult:
         constructed = {}
         for u, k in zip(units, keys):                    # all L
             with trace.record("L", u):
@@ -182,13 +190,16 @@ class ColdStartEngine:
                 state = self._apply_fn(u)(applied[u], state)
                 jax.block_until_ready(
                     state["logits" if u == units[-1] else "x"])
+                if u == units[-1] and on_logits is not None:
+                    on_logits(state["logits"])
         params = self.model.assemble(applied)
         return LoadResult(state["logits"], params, trace,
                           self.strategy.name)
 
     # ------------------------------------------------------- pipelined path
     def _load_pipelined(self, batch, units, keys, trace, dec,
-                        scheduler, state: PipelineState) -> LoadResult:
+                        scheduler, state: PipelineState,
+                        on_logits=None) -> LoadResult:
         strat = self.strategy
         if strat.decouple:
             dec.prefetch(units)                 # issue I/O at request arrival
@@ -197,7 +208,7 @@ class ColdStartEngine:
                               keys=list(keys), batch=batch, strategy=strat,
                               trace=trace, decoupler=dec, scheduler=scheduler,
                               state=state, apply_leaves=self._apply_leaves,
-                              apply_fn=self._apply_fn)
+                              apply_fn=self._apply_fn, on_output=on_logits)
         PipelineRuntime(standard_units(ctx), state).run()
 
         params = self.model.assemble(state.peek(APPLIED))

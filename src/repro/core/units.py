@@ -128,6 +128,12 @@ class PipelineContext:
     state: PipelineState
     apply_leaves: Callable[[str, PyTree, Any], PyTree]
     apply_fn: Callable[[str], Callable]
+    # Called with the request's logits as soon as the final unit's E
+    # completes them — while that E event is still open, before the
+    # pipeline drains/assembles.  This is how a cold *generation*
+    # request's first token is produced inside the pipeline (TTFT ~
+    # E-completion, not load + separate prefill).
+    on_output: Optional[Callable[[Any], None]] = None
 
     def index(self, unit: str) -> int:
         return self.units.index(unit)
@@ -254,6 +260,9 @@ class ComputeUnit(PipelineUnit):
             with ctx.trace.record("E", u):
                 st = ctx.apply_fn(u)(params, st)
                 jax.block_until_ready(st["logits" if u == last else "x"])
+                if u == last and ctx.on_output is not None:
+                    # first token sampled inside the final E event
+                    ctx.on_output(st["logits"])
         ctx.state.publish(OUTPUT, "logits", st["logits"])
 
 

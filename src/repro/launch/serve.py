@@ -6,6 +6,11 @@ Deploys the requested models to a local weight store (with a simulated
 storage device so the I/O phase is visible), generates an Azure-like
 invocation trace, replays it through the ServerlessPlatform and prints
 per-strategy latency / utilization statistics.
+
+``--workload generate --n-new 16`` replays the same trace as
+*generation* requests: each invocation decodes n-new tokens through the
+instances' continuous-batching DecodeSchedulers, and the report adds
+TTFT / TPOT / tokens-per-second.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.api import get_config
+from repro.serving.api import GenerateSpec
 from repro.serving.engine import ServerlessPlatform
 from repro.serving.trace import azure_like_trace, summarize
 from repro.store.store import BandwidthModel, WeightStore, deploy_model
@@ -60,6 +66,23 @@ def main(argv=None):
                     help="router workers / max in-flight invocations")
     ap.add_argument("--max-instances", type=int, default=1,
                     help="instance-pool scale-out limit per model")
+    ap.add_argument("--workload", default="oneshot",
+                    choices=["oneshot", "generate"],
+                    help="oneshot: batch->logits forwards (seed "
+                         "semantics); generate: multi-token decode "
+                         "through the continuous-batching scheduler")
+    ap.add_argument("--n-new", type=int, default=16,
+                    help="tokens to generate per invocation "
+                         "(--workload generate)")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="prompt length for generation invocations")
+    ap.add_argument("--gen-slots", type=int, default=8,
+                    help="decode-scheduler slots per instance "
+                         "(max concurrent generations batching)")
+    ap.add_argument("--gen-cache-len", type=int, default=256,
+                    help="KV cache positions per slot")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 = sampled generation")
     ap.add_argument("--cache-budget-mb", type=float, default=None,
                     help="enable the node-local shared WeightCache with "
                          "this byte budget (0 = unbounded; default: no "
@@ -76,6 +99,11 @@ def main(argv=None):
     for name in args.models:
         cfg = get_config(name, smoke=args.smoke)
         model = transformer.build(cfg)
+        if args.workload == "generate" and not hasattr(model,
+                                                       "decode_step"):
+            raise SystemExit(
+                f"--workload generate needs decoder LMs, got {name!r} "
+                f"({cfg.family.value}); try --models smollm-360m")
         if not store.has_model(name):
             print(f"deploying {name} "
                   f"({cfg.param_count() / 1e6:.1f}M params) ...")
@@ -93,13 +121,28 @@ def main(argv=None):
     platform = ServerlessPlatform(store, builders, strategy=args.strategy,
                                   keep_alive_s=args.keep_alive,
                                   max_instances=args.max_instances,
-                                  cache_budget_bytes=cache_budget)
+                                  cache_budget_bytes=cache_budget,
+                                  gen_slots=args.gen_slots,
+                                  gen_cache_len=args.gen_cache_len)
 
     def make_batch(name):
         return example_batch(get_config(name, smoke=args.smoke))
 
+    make_spec = None
+    if args.workload == "generate":
+        rng = np.random.default_rng(args.seed)
+
+        def make_spec(name):
+            cfg = get_config(name, smoke=args.smoke)
+            return GenerateSpec(
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    (args.prompt_len,)).astype(np.int32),
+                n_new=args.n_new, temperature=args.temperature,
+                seed=args.seed)
+
     responses = platform.run_trace(trace, make_batch,
-                                   concurrency=args.concurrency)
+                                   concurrency=args.concurrency,
+                                   make_spec=make_spec)
     lat = np.array([r.latency_s for r in responses])
     cold = np.array([r.cold for r in responses])
     print(f"strategy={args.strategy}  n={len(responses)}  "
@@ -113,6 +156,25 @@ def main(argv=None):
         ut = np.array([r.utilization for r in responses])[cold]
         print(f"cold-start: mean={cl.mean() * 1e3:.1f}ms "
               f"pipeline-util={ut.mean():.1%}")
+    if args.workload == "generate":
+        ttft = np.array([r.ttft_s for r in responses])
+        tpot = np.concatenate([r.tpot_s for r in responses
+                               if r.tpot_s]) if any(
+            r.tpot_s for r in responses) else np.array([0.0])
+        n_tok = sum(r.n_generated for r in responses)
+        span = max(r.t_done for r in responses) - \
+            min(r.t_arrival for r in responses)
+        print(f"generation: n_new={args.n_new}  total-tokens={n_tok}  "
+              f"tokens/s={n_tok / max(span, 1e-9):.1f}")
+        print(f"TTFT: p50={np.percentile(ttft, 50) * 1e3:.1f}ms "
+              f"p99={np.percentile(ttft, 99) * 1e3:.1f}ms   "
+              f"TPOT: mean={tpot.mean() * 1e3:.2f}ms")
+        if cold.any():
+            ct = ttft[cold]
+            cl2 = np.array([r.load_s for r in responses])[cold]
+            print(f"cold TTFT: mean={ct.mean() * 1e3:.1f}ms "
+                  f"(load {cl2.mean() * 1e3:.1f}ms — first token "
+                  f"in-pipeline: {bool((ct < cl2).all())})")
     if args.concurrency > 1:
         q = np.array([r.queue_s for r in responses])
         rs = platform.last_router_stats

@@ -1,18 +1,28 @@
-"""Serverless serving surface.
+"""Serverless serving surface (generation-first).
 
-  api      Request / RequestClass / Response / stats data model
+  api      Request / GenerateSpec / RequestClass / Response / stats +
+           typed errors (UnknownModelError, CacheOverflowError)
+  decode   DecodeScheduler: slot-based continuous-batching decode
+           engine + the serial reference_generate oracle
   policy   keep-alive eviction policies (TTL, never-evict)
-  pool     FunctionInstance + per-model InstancePool
-  router   thread-safe Router: admission control, priority dispatch
-  engine   ServerlessPlatform (trace replay on the Router) + LM server
+  pool     FunctionInstance (owns a DecodeScheduler when live) +
+           per-model InstancePool (exclusive + shared-generation holds)
+  router   thread-safe Router: admission control, priority dispatch,
+           generation requests join running decode batches
+  engine   ServerlessPlatform (trace replay on the Router, one-shot or
+           generation) + the BatchedLMServer compat shim
   trace    bursty Azure-like invocation workload generator
 
 The node-local WeightCache (repro.store.cache) is re-exported here:
 one cache per platform makes scale-out cold starts reuse resident
 weights and single-flight store reads.
 """
-from repro.serving.api import (AdmissionError, PoolStats, Request,  # noqa: F401
-                               RequestClass, Response, RouterStats)
+from repro.serving.api import (AdmissionError, CacheOverflowError,  # noqa: F401
+                               GenerateSpec, PoolStats, Request,
+                               RequestClass, Response, RouterStats,
+                               UnknownModelError)
+from repro.serving.decode import (DecodeScheduler, GenResult,  # noqa: F401
+                                  reference_generate)
 from repro.serving.policy import (EvictionPolicy, KeepAliveTTL,  # noqa: F401
                                   NeverEvict, make_policy)
 from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401

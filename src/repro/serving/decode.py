@@ -1,0 +1,396 @@
+"""Slot-based continuous-batching decode engine.
+
+One :class:`DecodeScheduler` is owned by each live
+:class:`~repro.serving.pool.FunctionInstance`.  It holds a single
+fixed-capacity *slotted* KV cache — ``init_cache(n_slots, cache_len)``
+— and decodes every resident generation request with one shared jitted
+step, whatever the slot occupancy:
+
+  * a request **joins** at a step boundary: its prompt is prefilled into
+    a fresh ``B=1`` cache on the calling thread, then merged into a free
+    slot between two batch steps (an in-flight step never observes a
+    half-written slot);
+  * a request **leaves** on completion or EOS, freeing its slot for the
+    next joiner — requests arriving at different times batch dynamically
+    instead of serializing;
+  * the batched step is **cooperatively driven**: every caller thread
+    blocked in :meth:`generate` is eligible to run the next step, so the
+    engine needs no dedicated decode thread and quiesces for free when
+    no request is resident.
+
+Correctness invariant (enforced by tests/test_generate.py): each
+request's token sequence is *bit-identical* to :func:`reference_generate`
+— a serial ``prefill`` + ``decode_step`` loop at ``B=1`` — because every
+per-slot computation (attention over its own cache rows, per-row MoE
+dispatch, SSM/RG-LRU state updates, sampling keyed by seed+position) is
+independent of what the other slots hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.api import CacheOverflowError, GenerateSpec
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# sampling — one rule shared by the batched step, the first-token path
+# (warm prefill AND the in-pipeline cold path) and the serial reference
+# ---------------------------------------------------------------------------
+
+def sample_tokens(logits: jax.Array, seed: jax.Array, next_pos: jax.Array,
+                  temperature: jax.Array) -> jax.Array:
+    """Per-row next-token choice.  logits: (B, V); seed/next_pos/
+    temperature: (B,).  temperature == 0 -> greedy argmax; > 0 ->
+    categorical over logits/temperature keyed by fold_in(seed, next_pos)
+    — deterministic per request and independent of co-resident rows.
+    """
+    def _row(lg, sd, p, t):
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        key = jax.random.fold_in(jax.random.PRNGKey(sd), p)
+        scaled = lg.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+        sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+        return jnp.where(t > 0, sampled, greedy)
+
+    return jax.vmap(_row)(logits, seed, next_pos, temperature)
+
+
+def sample_first(logits, spec: GenerateSpec, n_prompt: int) -> int:
+    """First token from full-prompt logits ((1, S, V): prefill output or
+    the cold pipeline's in-flight forward)."""
+    return int(sample_tokens(
+        logits[:, -1, :],
+        jnp.asarray([spec.seed], jnp.uint32),
+        jnp.asarray([n_prompt], jnp.int32),
+        jnp.asarray([spec.temperature], jnp.float32))[0])
+
+
+def validate_spec(spec: GenerateSpec, n_prompt: int, cache_len: int) -> int:
+    """Clamp n_new to the per-request max_len and validate against the
+    KV cache capacity; returns the effective n_new.
+
+    This replaces the old ``BatchedLMServer.generate`` behaviour of
+    silently wrapping/dropping KV entries once S + n_new overran
+    cache_len."""
+    n_new = int(spec.n_new)
+    if n_new < 1:
+        raise ValueError(f"n_new must be >= 1, got {spec.n_new}")
+    if spec.max_len is not None:
+        n_new = min(n_new, int(spec.max_len) - n_prompt)
+        if n_new < 1:
+            raise CacheOverflowError(
+                f"max_len={spec.max_len} leaves no room to generate "
+                f"after a {n_prompt}-token prompt")
+    if n_prompt + n_new > cache_len:
+        raise CacheOverflowError(
+            f"prompt ({n_prompt}) + n_new ({n_new}) = {n_prompt + n_new} "
+            f"tokens overflow the decode cache (cache_len={cache_len}); "
+            f"lower n_new / set max_len <= {cache_len} or provision a "
+            f"larger cache")
+    return n_new
+
+
+def _as_prompt(prompt) -> jax.Array:
+    arr = jnp.asarray(prompt, jnp.int32)
+    if arr.ndim == 1:
+        arr = arr[None, :]
+    if arr.ndim != 2 or arr.shape[0] != 1 or arr.shape[1] < 1:
+        raise ValueError(f"prompt must be (S,) or (1, S), got {arr.shape}")
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# results + per-request bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GenResult:
+    """What one generation request produced."""
+    tokens: List[int]            # emitted ids, first token included
+    token_times: List[float]     # monotonic emission time per token
+    n_prompt: int
+
+    @property
+    def t_first(self) -> float:
+        return self.token_times[0]
+
+    @property
+    def tpot_s(self) -> List[float]:
+        """Inter-token intervals (len == len(tokens) - 1)."""
+        tt = self.token_times
+        return [tt[i] - tt[i - 1] for i in range(1, len(tt))]
+
+
+class _Active:
+    """One resident request (pending join or holding a slot)."""
+
+    def __init__(self, spec: GenerateSpec, cache1: PyTree, first: int,
+                 t_first: float, n_prompt: int, n_new: int):
+        self.spec = spec
+        self.cache1 = cache1            # B=1 prefilled cache, until joined
+        self.tokens = [first]
+        self.times = [t_first]
+        self.n_prompt = n_prompt
+        self.remaining = n_new - 1
+        self.done = False
+        self.error: Optional[BaseException] = None
+
+    @property
+    def next_pos(self) -> int:
+        """Absolute position of the next input token (the last emitted
+        one): prompt occupies [0, S), generated token i sits at S + i."""
+        return self.n_prompt + len(self.tokens) - 1
+
+
+class DecodeScheduler:
+    """Continuous-batching decode over one slotted KV cache.
+
+    Thread-safe: any number of threads may call :meth:`generate`
+    concurrently; their requests share the batched step.  ``n_slots``
+    bounds concurrent residency (the honored successor of the old
+    server's dead ``max_batch`` knob) — an (n_slots+1)-th caller blocks
+    until a slot frees, which continuous batching makes soon and often.
+    """
+
+    def __init__(self, model, params: PyTree, *, n_slots: int = 8,
+                 cache_len: int = 256):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if cache_len < 2:
+            raise ValueError(f"cache_len must be >= 2, got {cache_len}")
+        self.model = model
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.cache_len = int(cache_len)
+        self._cache = model.init_cache(self.n_slots, self.cache_len)
+        # host-side per-slot step inputs
+        self._tok = np.zeros((self.n_slots, 1), np.int32)
+        self._pos = np.zeros((self.n_slots,), np.int32)
+        self._seed = np.zeros((self.n_slots,), np.uint32)
+        self._temp = np.zeros((self.n_slots,), np.float32)
+        self._cv = threading.Condition()
+        self._free: List[int] = list(range(self.n_slots))
+        self._slots: Dict[int, _Active] = {}
+        self._pending: deque = deque()
+        self._stepping = False
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(self._step_impl)
+        self._join_cache = jax.jit(self._join_cache_impl)
+        # counters
+        self.steps = 0
+        self.max_occupancy = 0
+        self.joined = 0
+
+    # -------------------------------------------------------- jitted kernels
+    def _step_impl(self, params, cache, tok, pos, seed, temp):
+        """One batched decode step over every slot (occupied or not) +
+        per-slot sampling — a single compile shared across occupancy."""
+        logits, cache = self.model.decode_step(params, cache, tok, pos)
+        nxt = sample_tokens(logits[:, -1, :], seed, pos + 1, temp)
+        return nxt[:, None], cache
+
+    def _join_cache_impl(self, cache, one, slot):
+        """Write a B=1 prefilled cache into batch row ``slot`` of the
+        slotted cache.  Top-level keys distinguish the stacked pattern
+        groups ('s*': leaves are (n_units, B, ...)) from tail layers
+        ('t*': leaves are (B, ...))."""
+        out = {}
+        for k, big in cache.items():
+            ax = 1 if k.startswith("s") else 0
+            out[k] = jax.tree.map(
+                lambda b, s, _ax=ax: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), slot, axis=_ax), big, one[k])
+        return out
+
+    # ------------------------------------------------------------ public API
+    def generate(self, spec: GenerateSpec, *,
+                 first_token: Optional[int] = None,
+                 t_first: Optional[float] = None) -> GenResult:
+        """Serve one generation request; blocks until it completes.
+
+        ``first_token``/``t_first`` inject a token already produced
+        elsewhere — the cold-start path, where the loading pipeline's
+        own in-flight forward answers the prompt (TTFT ~ the pipeline's
+        E-completion): the prompt is still prefilled here to build the
+        slot's KV cache, but its logits are discarded and generation
+        resumes at position S+1.
+        """
+        prompt = _as_prompt(spec.prompt)
+        n_prompt = int(prompt.shape[1])
+        n_new = validate_spec(spec, n_prompt, self.cache_len)
+
+        cache1 = self.model.init_cache(1, self.cache_len)
+        logits, cache1 = self._prefill(self.params, {"tokens": prompt},
+                                       cache1)
+        if first_token is None:
+            jax.block_until_ready(logits)
+            first_token = sample_first(logits, spec, n_prompt)
+            t_first = time.monotonic()
+
+        req = _Active(spec, cache1, int(first_token), float(t_first),
+                      n_prompt, n_new)
+        if req.remaining == 0 or (spec.eos_id is not None
+                                  and req.tokens[-1] == spec.eos_id):
+            return GenResult(req.tokens, req.times, n_prompt)
+
+        with self._cv:
+            self._pending.append(req)
+            self._cv.notify_all()
+        self._pump(req)
+        if req.error is not None:
+            raise req.error
+        return GenResult(req.tokens, req.times, n_prompt)
+
+    def stats(self) -> Dict[str, int]:
+        with self._cv:
+            return {"steps": self.steps, "joined": self.joined,
+                    "max_occupancy": self.max_occupancy,
+                    "active": len(self._slots) + len(self._pending),
+                    "n_slots": self.n_slots}
+
+    def reset_peaks(self):
+        """Re-arm the max_occupancy watermark at the current occupancy
+        — benchmark sweeps call this between phases so each phase
+        reports its own peak, not the scheduler-lifetime maximum."""
+        with self._cv:
+            self.max_occupancy = len(self._slots)
+
+    # -------------------------------------------------------- cooperative drive
+    def _admit_locked(self):
+        """Move pending joins into free slots (caller holds the lock) —
+        the step boundary where requests enter the running batch."""
+        while self._pending and self._free:
+            req = self._pending.popleft()
+            slot = min(self._free)
+            self._free.remove(slot)
+            self._cache = self._join_cache(self._cache, req.cache1,
+                                           jnp.int32(slot))
+            req.cache1 = None
+            self._slots[slot] = req
+            self._tok[slot, 0] = req.tokens[-1]
+            self._pos[slot] = req.next_pos
+            self._seed[slot] = np.uint32(req.spec.seed)
+            self._temp[slot] = np.float32(req.spec.temperature)
+            self.joined += 1
+            self.max_occupancy = max(self.max_occupancy, len(self._slots))
+
+    def _fail_locked(self, e: BaseException):
+        """Abort every resident request with ``e`` (caller holds the
+        lock): a failed step/join leaves no thread parked forever."""
+        self._stepping = False
+        for req in list(self._slots.values()) + list(self._pending):
+            req.error = e
+        self._slots.clear()
+        self._pending.clear()
+        self._free = list(range(self.n_slots))
+        self._cv.notify_all()
+
+    def _pump(self, my: _Active):
+        """Drive batched steps until ``my`` completes.  Exactly one
+        thread steps at a time; the others wait on the CV.  Every
+        resident request has a caller thread parked here, so a stepper
+        always exists while work remains."""
+        while True:
+            with self._cv:
+                while True:
+                    if my.done or my.error is not None:
+                        return
+                    if not self._stepping:
+                        break
+                    self._cv.wait()
+                self._stepping = True
+                try:
+                    self._admit_locked()
+                    params, cache = self.params, self._cache
+                    tok = jnp.asarray(self._tok)
+                    pos = jnp.asarray(self._pos)
+                    seed = jnp.asarray(self._seed)
+                    temp = jnp.asarray(self._temp)
+                except BaseException as e:
+                    # anything failing while _stepping is set must fail
+                    # ALL residents, or their threads wait forever
+                    self._fail_locked(e)
+                    raise
+            try:
+                nxt, new_cache = self._step(params, cache, tok, pos,
+                                            seed, temp)
+                nxt_host = np.asarray(nxt)
+            except BaseException as e:
+                with self._cv:
+                    self._fail_locked(e)
+                raise
+            t_now = time.monotonic()
+            with self._cv:
+                self._cache = new_cache
+                self.steps += 1
+                for slot in list(self._slots):
+                    req = self._slots[slot]
+                    t = int(nxt_host[slot, 0])
+                    req.tokens.append(t)
+                    req.times.append(t_now)
+                    req.remaining -= 1
+                    self._tok[slot, 0] = t
+                    self._pos[slot] += 1
+                    if req.remaining == 0 or \
+                            (req.spec.eos_id is not None
+                             and t == req.spec.eos_id):
+                        req.done = True
+                        del self._slots[slot]
+                        self._free.append(slot)
+                self._stepping = False
+                self._cv.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# serial reference — the oracle the batched engine must match bit-for-bit
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _ref_fns(model):
+    """Per-model jitted prefill/decode_step, cached so repeated
+    reference calls (the bench's serial baseline) don't recompile.
+    Bounded: the jitted closures pin the model and its executables, so
+    an unbounded cache would leak one model per entry for the process
+    lifetime."""
+    return jax.jit(model.prefill), jax.jit(model.decode_step)
+
+
+def reference_generate(model, params: PyTree, prompt, *, n_new: int,
+                       cache_len: int = 256, temperature: float = 0.0,
+                       seed: int = 0, eos_id: Optional[int] = None,
+                       max_len: Optional[int] = None) -> List[int]:
+    """Serial B=1 ``prefill`` + ``decode_step`` loop with the same
+    sampling rule as the DecodeScheduler.  Token-level ground truth for
+    the equivalence tests and the bench's per-request serial baseline.
+    """
+    spec = GenerateSpec(prompt=prompt, n_new=n_new, temperature=temperature,
+                        max_len=max_len, eos_id=eos_id, seed=seed)
+    prompt = _as_prompt(prompt)
+    S = int(prompt.shape[1])
+    n_new = validate_spec(spec, S, cache_len)
+
+    prefill, dec = _ref_fns(model)
+    cache = model.init_cache(1, cache_len)
+    logits, cache = prefill(params, {"tokens": prompt}, cache)
+    out = [sample_first(logits, spec, S)]
+    seeds = jnp.asarray([seed], jnp.uint32)
+    temps = jnp.asarray([temperature], jnp.float32)
+    cur = jnp.asarray([[out[0]]], jnp.int32)
+    for t in range(S, S + n_new - 1):
+        if eos_id is not None and out[-1] == eos_id:
+            break
+        pos = jnp.asarray([t], jnp.int32)
+        logits, cache = dec(params, cache, cur, pos)
+        cur = sample_tokens(logits[:, -1, :], seeds, pos + 1, temps)[:, None]
+        out.append(int(cur[0, 0]))
+    return out

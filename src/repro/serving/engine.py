@@ -1,28 +1,35 @@
 """Serverless serving engine: trace replay on the Router/InstancePool
-platform API, plus the steady-state batched LM server.
+platform API, plus the compat LM-server shim.
 
 :class:`ServerlessPlatform` wires one :class:`InstancePool` per deployed
 model behind a :class:`Router` and replays invocation traces through it.
 ``run_trace(..., concurrency=N)`` admits up to N invocations
 concurrently (N router workers); ``concurrency=1`` reproduces the
-seed's strictly serial replay semantics exactly.  Keep-alive accounting
-runs on the trace's *logical* clock regardless of replay speed: before
-each submission the platform sweeps every pool, and the eviction policy
-(default: the seed's TTL rule) reclaims idle instances — re-triggering
-cold starts, the serverless lifecycle of the paper's Fig. 2.
+seed's strictly serial replay semantics exactly.  ``run_trace(...,
+make_spec=...)`` replays the trace as *generation* requests — each
+invocation decodes through the instances' continuous-batching
+DecodeSchedulers and its Response carries tokens / TTFT / TPOT.
+Keep-alive accounting runs on the trace's *logical* clock regardless of
+replay speed: before each submission the platform sweeps every pool,
+and the eviction policy (default: the seed's TTL rule) reclaims idle
+instances — re-triggering cold starts, the serverless lifecycle of the
+paper's Fig. 2.
 
-The classes the old API exposed (``FunctionInstance``, ``Response``)
-are re-exported here so existing benchmarks and examples run unmodified.
+The classes the old API exposed (``FunctionInstance``, ``Response``,
+``BatchedLMServer``) are re-exported / shimmed here so existing
+benchmarks and examples run unmodified.
 """
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.serving.api import Request, Response  # noqa: F401 (re-export)
+from repro.serving.api import GenerateSpec, Request, Response  # noqa: F401
+from repro.serving.decode import DecodeScheduler, reference_generate  # noqa: F401
 from repro.serving.policy import EvictionPolicy, make_policy
 from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401
 from repro.serving.router import Router
@@ -42,7 +49,8 @@ class ServerlessPlatform:
                  max_instances: int = 1,
                  policy: Optional[EvictionPolicy] = None,
                  cache_budget_bytes: Optional[int] = None,
-                 cache: Optional[WeightCache] = None):
+                 cache: Optional[WeightCache] = None,
+                 gen_slots: int = 8, gen_cache_len: int = 256):
         """builders: model_name -> () -> (model, example_batch).
 
         cache_budget_bytes: enable ONE node-local WeightCache shared by
@@ -51,6 +59,10 @@ class ServerlessPlatform:
         (None -> no cache, seed behaviour; 0 -> unbounded).  Pass
         ``cache`` to share an externally-owned cache instead (e.g. one
         cache across several platforms on a node).
+
+        gen_slots / gen_cache_len: per-instance continuous-batching
+        capacity — up to gen_slots concurrent generation requests share
+        one slotted KV cache of gen_cache_len positions per slot.
         """
         self.store = store
         self.strategy = strategy
@@ -65,7 +77,9 @@ class ServerlessPlatform:
                                max_instances=max_instances,
                                io_workers=io_workers,
                                chunk_bytes=chunk_bytes,
-                               cache=self.cache)
+                               cache=self.cache,
+                               gen_slots=gen_slots,
+                               gen_cache_len=gen_cache_len)
             for name, builder in builders.items()}
         self.last_router_stats = None      # RouterStats of the last replay
 
@@ -90,7 +104,9 @@ class ServerlessPlatform:
 
     def run_trace(self, invocations, make_batch,
                   *, time_scale: float = 0.0,
-                  concurrency: int = 1) -> List[Response]:
+                  concurrency: int = 1,
+                  make_spec: Optional[Callable[[str], GenerateSpec]] = None
+                  ) -> List[Response]:
         """Replay a trace.  time_scale=0 -> as-fast-as-possible (arrival
         gaps are skipped but keep-alive accounting still uses the
         *logical* clock); >0 -> sleep scaled real time between arrivals.
@@ -105,6 +121,12 @@ class ServerlessPlatform:
         instance kept busy by overlapping requests counts as
         continuously active (so cold/warm mixes can differ from serial
         replay under contention).
+
+        make_spec: model_name -> GenerateSpec.  When given, the trace
+        replays as *generation* requests (make_batch is unused) —
+        concurrent invocations of one model join its instance's decode
+        scheduler and batch dynamically; each Response carries tokens,
+        ttft_s and tpot_s.
         """
         router = self.router(workers=max(1, concurrency))
         try:
@@ -120,9 +142,14 @@ class ServerlessPlatform:
                 logical_prev = inv.t
                 # logical keep-alive: evict instances idle past the TTL
                 self.sweep(clock)
-                fut = router.submit(Request(
-                    req_id=inv.req_id, model=inv.model,
-                    batch=make_batch(inv.model), t_logical=clock))
+                if make_spec is not None:
+                    req = Request(req_id=inv.req_id, model=inv.model,
+                                  gen=make_spec(inv.model), t_logical=clock)
+                else:
+                    req = Request(req_id=inv.req_id, model=inv.model,
+                                  batch=make_batch(inv.model),
+                                  t_logical=clock)
+                fut = router.submit(req)
                 futures.append(fut)
                 if concurrency <= 1:
                     fut.result()           # strict serial replay
@@ -133,32 +160,49 @@ class ServerlessPlatform:
 
 
 # ---------------------------------------------------------------------------
-# LM batched serving (prefill + decode loop) — steady-state path
+# LM batched serving — compat shim over the DecodeScheduler
 # ---------------------------------------------------------------------------
 
 class BatchedLMServer:
-    """Simple continuous-batching decode server for a live LM."""
+    """Compat shim: the old static-batch server surface, served by the
+    slot-based continuous-batching :class:`DecodeScheduler`.
+
+    Differences from the old implementation (both deliberate fixes):
+    ``max_batch`` is *honored* as the scheduler's slot count (it was a
+    dead knob), and a prompt+n_new that overflows ``cache_len`` raises
+    :class:`~repro.serving.api.CacheOverflowError` instead of silently
+    wrapping/dropping KV entries past the cache end."""
 
     def __init__(self, model, params: PyTree, *, max_batch: int = 8,
                  cache_len: int = 256):
         self.model = model
         self.params = params
-        self.max_batch = max_batch
-        self.cache_len = cache_len
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+        self.max_batch = int(max_batch)
+        self.cache_len = int(cache_len)
+        self.scheduler = DecodeScheduler(model, params, n_slots=max_batch,
+                                         cache_len=cache_len)
 
     def generate(self, tokens: jax.Array, *, n_new: int,
-                 greedy: bool = True) -> jax.Array:
-        """tokens: (B, S) prompt batch -> (B, n_new) generated ids."""
+                 greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0) -> jax.Array:
+        """tokens: (B, S) prompt batch -> (B, n_new) generated ids.
+
+        Rows are submitted as B concurrent generation requests, so they
+        decode as one continuous batch through the shared slotted KV
+        cache (the old server stepped a private static batch)."""
         B, S = tokens.shape
-        cache = self.model.init_cache(B, self.cache_len)
-        logits, cache = self._prefill(self.params, {"tokens": tokens}, cache)
-        cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        outs = [cur]
-        for t in range(S, S + n_new - 1):
-            pos = jnp.full((B,), t, jnp.int32)
-            logits, cache = self._decode(self.params, cache, cur, pos)
-            cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            outs.append(cur)
-        return jnp.concatenate(outs, axis=1)
+        if B > self.max_batch:
+            raise ValueError(
+                f"batch {B} exceeds max_batch={self.max_batch} "
+                f"(the scheduler's slot count)")
+        specs = [GenerateSpec(prompt=tokens[b], n_new=n_new,
+                              temperature=0.0 if greedy else temperature,
+                              seed=seed + b)
+                 for b in range(B)]
+        if B == 1:
+            rows = [self.scheduler.generate(specs[0]).tokens]
+        else:
+            with ThreadPoolExecutor(max_workers=B) as ex:
+                rows = list(ex.map(
+                    lambda s: self.scheduler.generate(s).tokens, specs))
+        return jnp.asarray(rows, jnp.int32)

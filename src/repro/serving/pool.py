@@ -5,19 +5,29 @@ live model.  The first request after provisioning is a **cold start**
 and goes through the Cicada pipeline (``ColdStartEngine``) — the
 triggering request's inference is computed layer-by-layer *inside* the
 loading pipeline.  Subsequent requests are **warm**: direct steady-state
-forward.
+forward, or — for generation requests — a join into the instance's
+:class:`~repro.serving.decode.DecodeScheduler`, the slot-based
+continuous-batching decode engine each live instance owns.
 
 :class:`InstancePool` owns up to ``max_instances`` containers for one
-model function and hands them out under mutual exclusion:
+model function and hands them out under two disciplines:
 
-  * a request acquires an instance exclusively, so a cold model hit by
-    concurrent requests either rides the one in-flight pipeline
-    (followers wait and are served warm) or scales out onto a fresh
-    instance — never two pipelines loading into the same container;
+  * **exclusive** (:meth:`acquire`): one-shot forwards and cold-start
+    pipeline loads — a cold model hit by concurrent requests either
+    rides the one in-flight pipeline (followers wait and are served
+    warm) or scales out onto a fresh instance, never two pipelines
+    loading into the same container;
+  * **shared generation** (:meth:`acquire_gen`): any number of
+    generation requests up to the scheduler's slot count may hold a
+    *live* instance concurrently — that co-residency is what lets them
+    batch dynamically.  A cold instance is first held exclusively for
+    the pipeline load; :meth:`mark_live` then opens it to joiners
+    mid-request.
   * keep-alive is delegated to an :class:`~repro.serving.policy.
     EvictionPolicy`; :meth:`sweep` offers only *idle* instances to it on
     whatever clock the caller advances (logical trace time in replay);
-  * :meth:`stats` exposes cold/warm/eviction counters per pool.
+    instances with resident generations are busy, hence never offered;
+  * :meth:`stats` exposes cold/warm/eviction/generation counters.
 """
 from __future__ import annotations
 
@@ -29,7 +39,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.coldstart import ColdStartEngine, LoadResult
-from repro.serving.api import PoolStats
+from repro.serving.api import GenerateSpec, PoolStats
+from repro.serving.decode import (DecodeScheduler, GenResult, sample_first,
+                                  validate_spec, _as_prompt)
 from repro.serving.policy import EvictionPolicy, NeverEvict
 from repro.store.cache import WeightCache
 from repro.store.store import WeightStore
@@ -47,7 +59,12 @@ class FunctionInstance:
                  strategy: str = "cicada", io_workers: int = 4,
                  chunk_bytes: int = 1 << 20, warm: bool = True,
                  example_batch: Optional[Dict[str, jax.Array]] = None,
-                 cache: Optional[WeightCache] = None):
+                 cache: Optional[WeightCache] = None,
+                 gen_slots: int = 8, gen_cache_len: int = 256):
+        """gen_slots / gen_cache_len: capacity of this container's
+        continuous-batching DecodeScheduler — concurrent generation
+        requests up to gen_slots share one slotted KV cache of
+        gen_cache_len positions per slot."""
         self.model = model
         self.model_name = model_name
         self.engine = ColdStartEngine(model, model_name, store,
@@ -57,6 +74,12 @@ class FunctionInstance:
                                       cache=cache)
         self.params: Optional[PyTree] = None
         self.last_load: Optional[LoadResult] = None
+        self.gen_slots = int(gen_slots)
+        self.gen_cache_len = int(gen_cache_len)
+        self.scheduler: Optional[DecodeScheduler] = None
+        # guards scheduler creation: warm generation joiners are NOT
+        # serialized by the pool (shared holds), so two may race here
+        self._sched_lock = threading.Lock()
         self._fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
         if warm and example_batch is not None:
             self.engine.warmup(example_batch)
@@ -71,6 +94,7 @@ class FunctionInstance:
 
     def evict(self):
         self.params = None
+        self.scheduler = None          # slotted KV cache dies with the params
 
     def invoke(self, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, dict]:
         """Returns (logits, {"cold": bool, "load_s": float, "infer_s"})."""
@@ -88,9 +112,76 @@ class FunctionInstance:
                         "infer_s": time.monotonic() - t0,
                         "utilization": 1.0}
 
+    # ------------------------------------------------------------ generation
+    def _ensure_scheduler(self) -> DecodeScheduler:
+        if self.scheduler is None:
+            with self._sched_lock:
+                if self.scheduler is None:
+                    self.scheduler = DecodeScheduler(
+                        self.model, self.params, n_slots=self.gen_slots,
+                        cache_len=self.gen_cache_len)
+        return self.scheduler
+
+    def generate(self, spec: GenerateSpec, *,
+                 on_live: Optional[Callable[[], None]] = None
+                 ) -> Tuple[GenResult, dict]:
+        """Serve one generation request on this container.
+
+        Cold: the Cicada pipeline loads the model AND answers the
+        prompt — the first token is sampled from the pipeline's
+        in-flight logits the moment the final E completes (TTFT lands
+        within the load), then the request migrates into the decode
+        scheduler at position S+1.  Warm: prefill + join directly.
+
+        on_live: called once the instance holds params and a scheduler
+        (immediately when already warm) — the pool uses it to open a
+        cold-held instance to concurrent joiners mid-request.
+        """
+        prompt = _as_prompt(spec.prompt)
+        n_prompt = int(prompt.shape[1])
+        # fail before the expensive load, not after
+        validate_spec(spec, n_prompt, self.gen_cache_len)
+        if not self.live:
+            first: Dict[str, Any] = {}
+
+            def _first_token(logits):
+                first["token"] = sample_first(logits, spec, n_prompt)
+                first["t"] = time.monotonic()
+
+            res = self.engine.load({"tokens": prompt},
+                                   on_logits=_first_token)
+            self.params = res.params
+            self.last_load = res
+            self._ensure_scheduler()
+            if on_live is not None:
+                on_live()
+            result = self.scheduler.generate(spec,
+                                             first_token=first["token"],
+                                             t_first=first["t"])
+            return result, {"cold": True,
+                            "load_s": res.trace.total_time(),
+                            "infer_s": 0.0,
+                            "utilization": res.trace.utilization()}
+        self._ensure_scheduler()
+        if on_live is not None:
+            on_live()
+        t0 = time.monotonic()
+        result = self.scheduler.generate(spec)
+        return result, {"cold": False, "load_s": 0.0,
+                        "infer_s": time.monotonic() - t0,
+                        "utilization": 1.0}
+
 
 class InstancePool:
     """Thread-safe pool of FunctionInstances for one model function."""
+
+    # After an exclusive acquire() times out, new generation joins stay
+    # paused this long (refreshed on every timeout, cleared the moment
+    # an exclusive acquire succeeds).  Covers the Router's
+    # requeue-and-retry gap, during which no acquire() is parked in
+    # wait(); bounded so an abandoned requester can't block generation
+    # service forever.
+    EXCL_STARVATION_GRACE_S = 5.0
 
     def __init__(self, model_name: str,
                  builder: Callable[[], Tuple[Any, Dict]],
@@ -100,17 +191,22 @@ class InstancePool:
                  max_instances: int = 1, io_workers: int = 4,
                  chunk_bytes: int = 1 << 20,
                  instance_factory: Optional[Callable[[], Any]] = None,
-                 cache: Optional[WeightCache] = None):
+                 cache: Optional[WeightCache] = None,
+                 gen_slots: int = 8, gen_cache_len: int = 256):
         """builder: () -> (model, example_batch).  ``instance_factory``
         overrides container provisioning (tests / future remote pools);
         the default builds a warmed FunctionInstance.  ``cache``: one
         node-local WeightCache shared by every instance of this pool
         (and, via the platform, across pools) — concurrent scale-out
-        cold starts then single-flight each unit's store read."""
+        cold starts then single-flight each unit's store read.
+        ``gen_slots``/``gen_cache_len``: per-instance DecodeScheduler
+        capacity (concurrent generation residency / KV positions)."""
         self.model_name = model_name
         self.policy = policy if policy is not None else NeverEvict()
         self.max_instances = max(1, int(max_instances))
         self.cache = cache
+        self.gen_slots = int(gen_slots)
+        self.gen_cache_len = int(gen_cache_len)
         self._builder = builder
         self._store = store
         self._strategy = strategy
@@ -123,6 +219,10 @@ class InstancePool:
         self._busy: List[Any] = []
         self._creating = 0
         self._last_used: Dict[int, float] = {}     # id(inst) -> logical t
+        self._gen_count: Dict[int, int] = {}       # id(inst) -> joined gens
+        self._gen_cold: set = set()                # ids mid cold load
+        self._excl_waiters = 0                     # acquire() calls in wait
+        self._excl_starved_until = 0.0             # sticky join pause
         self._cold_starts = 0
         self._warm_hits = 0
         self._evictions = 0
@@ -134,7 +234,9 @@ class InstancePool:
                                 io_workers=self._io_workers,
                                 chunk_bytes=self._chunk_bytes,
                                 example_batch=example,
-                                cache=self.cache)
+                                cache=self.cache,
+                                gen_slots=self.gen_slots,
+                                gen_cache_len=self.gen_cache_len)
 
     # ------------------------------------------------------------ lifecycle
     def acquire(self, *, timeout: Optional[float] = None,
@@ -159,18 +261,31 @@ class InstancePool:
                 if inst is not None:
                     self._idle.remove(inst)
                     self._busy.append(inst)
+                    self._excl_starved_until = 0.0   # exclusive won
                     return inst
                 if len(self._instances) + self._creating \
                         < self.max_instances:
                     self._creating += 1
+                    self._excl_starved_until = 0.0   # exclusive won
                     break
                 remaining = None if deadline is None \
                     else deadline - time.monotonic()
                 if remaining is not None and remaining <= 0:
+                    # the requester will likely requeue and retry (the
+                    # Router's loop): keep joins paused across the gap,
+                    # or a continuous joiner stream wins every race
+                    self._excl_starved_until = time.monotonic() + \
+                        self.EXCL_STARVATION_GRACE_S
                     raise TimeoutError(
                         f"pool {self.model_name!r} saturated "
                         f"({self.max_instances} instances busy)")
-                self._cv.wait(remaining)
+                # while we wait, _gen_candidate grants no new joins, so
+                # shared generation holds drain instead of starving us
+                self._excl_waiters += 1
+                try:
+                    self._cv.wait(remaining)
+                finally:
+                    self._excl_waiters -= 1
         # Provision outside the lock: builder() + warmup compilation are
         # expensive and must not serialize the pool.
         try:
@@ -185,6 +300,138 @@ class InstancePool:
             self._instances.append(inst)
             self._busy.append(inst)
         return inst
+
+    # --------------------------------------------------- shared generation
+    def _gen_candidate(self):
+        """A live instance a generation request may join right now:
+        not mid cold-load, not exclusively held by one-shot work, with
+        scheduler slot capacity.  Idle instances preferred (caller
+        holds the lock).
+
+        While an exclusive acquire() is blocked in wait() — or recently
+        timed out and is being requeued/retried by the Router — no new
+        joins are granted: a continuous stream of joiners would
+        otherwise keep ``gen_count > 0`` forever and starve one-shot
+        work on a saturated pool.  Pausing joins lets the resident
+        generations drain, the instance go idle, and the exclusive
+        request win (joiners requeue via the router's acquire timeout
+        meanwhile)."""
+        if self._excl_waiters > 0 or \
+                time.monotonic() < self._excl_starved_until:
+            return None
+        for inst in list(self._idle) + list(self._busy):
+            if not inst.live:
+                continue
+            gid = id(inst)
+            if gid in self._gen_cold:
+                continue                      # pipeline still loading it
+            cnt = self._gen_count.get(gid, 0)
+            if inst in self._busy and cnt == 0:
+                continue                      # exclusive one-shot holder
+            if cnt < getattr(inst, "gen_slots", 1):
+                return inst
+        return None
+
+    def acquire_gen(self, *, timeout: Optional[float] = None,
+                    logical_now: Optional[float] = None):
+        """Reserve a *shared* generation hold.  Returns
+        ``(inst, joinable)``:
+
+          * joinable=True  — inst is live; the caller can join its
+            decode scheduler immediately (other requests may already be
+            resident: that co-residency is the continuous batch);
+          * joinable=False — inst is cold and now held for this
+            caller's pipeline load; the pool keeps other generation
+            requests off it until :meth:`mark_live`.
+
+        Preference order mirrors :meth:`acquire`: live instance with
+        slot capacity, then a cold idle one, then scale-out up to
+        ``max_instances``; otherwise block until something frees."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if logical_now is not None:
+                    self._evict_expired(logical_now)
+                inst = self._gen_candidate()
+                if inst is not None:
+                    gid = id(inst)
+                    self._gen_count[gid] = self._gen_count.get(gid, 0) + 1
+                    if inst in self._idle:
+                        self._idle.remove(inst)
+                        self._busy.append(inst)
+                    return inst, True
+                inst = next((i for i in self._idle if not i.live), None)
+                if inst is not None:          # cold container: load here
+                    self._idle.remove(inst)
+                    self._busy.append(inst)
+                    self._gen_count[id(inst)] = 1
+                    self._gen_cold.add(id(inst))
+                    return inst, False
+                if len(self._instances) + self._creating \
+                        < self.max_instances:
+                    self._creating += 1
+                    break
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"pool {self.model_name!r} saturated for "
+                        f"generation ({self.max_instances} instances, "
+                        f"all slots busy)")
+                # nothing notifies when the exclusive-starvation window
+                # lapses by itself (abandoned requester): cap the wait
+                # at its expiry so joins resume then, not never
+                window = self._excl_starved_until - time.monotonic()
+                if window > 0:
+                    remaining = window if remaining is None \
+                        else min(remaining, window)
+                self._cv.wait(remaining)
+        # Provision outside the lock (same rationale as acquire()).
+        try:
+            inst = self._factory()
+        except BaseException:
+            with self._cv:
+                self._creating -= 1
+                self._cv.notify_all()
+            raise
+        with self._cv:
+            self._creating -= 1
+            self._instances.append(inst)
+            self._busy.append(inst)
+            self._gen_count[id(inst)] = 1
+            self._gen_cold.add(id(inst))
+        return inst, False
+
+    def mark_live(self, inst):
+        """The cold load on ``inst`` finished: open it to concurrent
+        generation joiners (called mid-request via on_live)."""
+        with self._cv:
+            self._gen_cold.discard(id(inst))
+            self._cv.notify_all()
+
+    def release_gen(self, inst, *, logical_now: float = 0.0,
+                    cold: Optional[bool] = None):
+        """Drop one shared generation hold; the instance returns to the
+        idle list (keep-alive clock updated) when the last hold drops."""
+        with self._cv:
+            gid = id(inst)
+            n = self._gen_count.get(gid, 0) - 1
+            if n < 0:
+                raise ValueError("release_gen without a matching hold")
+            if n == 0:
+                self._gen_count.pop(gid, None)
+                self._gen_cold.discard(gid)
+                self._busy.remove(inst)
+                self._idle.append(inst)
+            else:
+                self._gen_count[gid] = n
+            self._last_used[gid] = max(
+                self._last_used.get(gid, 0.0), logical_now)
+            if cold is True:
+                self._cold_starts += 1
+            elif cold is False:
+                self._warm_hits += 1
+            self._cv.notify_all()
 
     def release(self, inst, *, logical_now: float = 0.0,
                 cold: Optional[bool] = None):
@@ -238,4 +485,5 @@ class InstancePool:
                              busy=len(self._busy),
                              cold_starts=self._cold_starts,
                              warm_hits=self._warm_hits,
-                             evictions=self._evictions)
+                             evictions=self._evictions,
+                             gen_active=sum(self._gen_count.values()))

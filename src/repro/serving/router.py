@@ -25,9 +25,26 @@ import time
 from concurrent.futures import Future
 from typing import Any, Dict, Optional
 
+import numpy as np
+
+from concurrent.futures import InvalidStateError
+
 from repro.serving.api import (AdmissionError, Request, RequestClass,
-                               Response, RouterStats)
+                               Response, RouterStats, UnknownModelError)
 from repro.serving.pool import InstancePool
+
+
+def _resolve(fut: "Future", *, result=None, exc=None):
+    """Terminal Future transition that tolerates a concurrent cancel —
+    set_result/set_exception on a cancelled future raises
+    InvalidStateError, which would otherwise kill the worker thread."""
+    try:
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(result)
+    except InvalidStateError:
+        pass
 
 
 class Router:
@@ -70,9 +87,13 @@ class Router:
 
     def submit(self, req: Request) -> "Future[Response]":
         """Admit one invocation; returns a Future resolving to its
-        Response (or raising the dispatch error)."""
+        Response (or raising the dispatch error).  Unknown models fail
+        here, on the submitting thread, with a typed error — not with a
+        bare KeyError surfacing from a worker."""
         if req.model not in self.pools:
-            raise KeyError(f"no pool for model {req.model!r}")
+            raise UnknownModelError(
+                f"no pool for model {req.model!r}; deployed: "
+                f"{sorted(self.pools)}")
         req.t_submit = time.monotonic()
         if req.cls is None:
             req.cls = self._classify(req)
@@ -105,6 +126,8 @@ class Router:
             self._dispatch(req, fut)
 
     def _dispatch(self, req: Request, fut: "Future[Response]"):
+        if req.gen is not None:
+            return self._dispatch_gen(req, fut)
         pool = self.pools[req.model]
         inst = None
         try:
@@ -118,6 +141,12 @@ class Router:
                     heapq.heappush(self._heap,
                                    (int(req.cls), next(self._seq), req, fut))
                     self._cv.notify()
+                return
+            # claim the future before doing work: a request cancelled
+            # while queued is dropped here instead of being served into
+            # a dead future (whose set_result would kill this worker)
+            if not fut.set_running_or_notify_cancel():
+                pool.release(inst, logical_now=req.t_logical)
                 return
             # service starts here: t_arrival/latency_s measure the
             # invocation itself (seed semantics) — router queueing,
@@ -138,7 +167,7 @@ class Router:
             inst = None
             with self._cv:
                 self.stats.completed += 1
-            fut.set_result(Response(
+            _resolve(fut, result=Response(
                 req_id=req.req_id, model=req.model, cold=info["cold"],
                 t_arrival=t_arr, t_done=t_done,
                 load_s=info["load_s"], infer_s=info["infer_s"],
@@ -147,7 +176,64 @@ class Router:
         except BaseException as e:
             if inst is not None:
                 pool.release(inst, logical_now=req.t_logical)
-            fut.set_exception(e)
+            _resolve(fut, exc=e)
+
+    def _dispatch_gen(self, req: Request, fut: "Future[Response]"):
+        """Generation dispatch: a *shared* pool hold — concurrent
+        requests join one instance's continuous-batching decode
+        scheduler instead of serializing behind exclusive acquire.  A
+        cold instance is held exclusively only for the pipeline load
+        (its first token is produced in-pipeline); mark_live then opens
+        it to joiners mid-request."""
+        pool = self.pools[req.model]
+        inst = None
+        holding = False
+        try:
+            try:
+                inst, joinable = pool.acquire_gen(
+                    timeout=self.acquire_timeout_s,
+                    logical_now=req.t_logical)
+                holding = True
+            except TimeoutError:
+                with self._cv:
+                    heapq.heappush(self._heap,
+                                   (int(req.cls), next(self._seq), req, fut))
+                    self._cv.notify()
+                return
+            if not fut.set_running_or_notify_cancel():
+                pool.release_gen(inst, logical_now=req.t_logical)
+                return                    # cancelled while queued
+            on_live = None if joinable else \
+                (lambda i=inst: pool.mark_live(i))
+            t_arr = time.monotonic()
+            with self._cv:
+                self._in_flight += 1
+                self.stats.max_in_flight = max(self.stats.max_in_flight,
+                                               self._in_flight)
+            try:
+                result, info = inst.generate(req.gen, on_live=on_live)
+            finally:
+                with self._cv:
+                    self._in_flight -= 1
+            t_done = time.monotonic()
+            pool.release_gen(inst, logical_now=req.t_logical,
+                             cold=info["cold"])
+            holding = False
+            with self._cv:
+                self.stats.completed += 1
+            _resolve(fut, result=Response(
+                req_id=req.req_id, model=req.model, cold=info["cold"],
+                t_arrival=t_arr, t_done=t_done,
+                load_s=info["load_s"], infer_s=info["infer_s"],
+                utilization=info["utilization"],
+                queue_s=t_arr - req.t_submit, cls=req.cls,
+                tokens=np.asarray(result.tokens, np.int32),
+                ttft_s=result.t_first - t_arr,
+                tpot_s=result.tpot_s))
+        except BaseException as e:
+            if holding:
+                pool.release_gen(inst, logical_now=req.t_logical)
+            _resolve(fut, exc=e)
 
     def cache_stats(self):
         """CacheStats of the attached node-local WeightCache (None when
