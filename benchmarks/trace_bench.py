@@ -13,6 +13,11 @@ per-strategy mean latency under the bursty Azure-like workload, plus
     generation request whose first token must land inside the loading
     pipeline (before the final E event completes).
 
+``--mesh`` sweeps shard-granular cold starts over simulated device
+meshes of 1 / 2 / 4 (λScale-style: every device brings its own
+``--bandwidth-mbps`` store channel) and reports the critical-path load
+time per mesh size — the BENCH_sharded.json artifact.
+
 Run directly for CI's bench-smoke job:
 
     PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
@@ -20,11 +25,20 @@ Run directly for CI's bench-smoke job:
     PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
         --workload generate --models smollm-360m \
         --json-out BENCH_generate.json
+    PYTHONPATH=src:. python benchmarks/trace_bench.py --quick --mesh \
+        --bandwidth-mbps 200 --json-out BENCH_sharded.json
 """
 from __future__ import annotations
 
 import json
+import os
+import sys
 import time
+
+# Must precede the jax import (jax locks the device count on first
+# init): the --mesh sweep simulates a 4-device host mesh on CPU.
+if "--mesh" in sys.argv and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 import numpy as np
 
@@ -214,10 +228,89 @@ def generate_run(args):
     return rows
 
 
+def mesh_run(args):
+    """--mesh: shard-granular cold starts on simulated meshes of
+    1 / 2 / 4 devices.
+
+    Every mesh device brings its own ``--bandwidth-mbps`` store channel
+    (``BandwidthModel(channels=n)``) — the λScale / HydraServe regime
+    where aggregate load bandwidth scales with workers — so the
+    critical-path load time of a cicada cold start should fall ~n-fold.
+
+    Rows (name, load_ms, derived):
+      sharded/mesh{n}/load_ms        end-to-end cold-start pipeline time,
+                                     min of 3 warmed loads (this host's
+                                     CPU-count dwarfs the simulated
+                                     device count, so single-shot walls
+                                     carry scheduler noise); derived =
+                                     that load's retrieval-window ms
+                                     (first R start -> last R end)
+      sharded/mesh4_vs_mesh1/speedup load-time ratio (monotonicity +
+                                     the >=2x acceptance row)
+    """
+    import dataclasses
+    import tempfile
+
+    import jax
+
+    from repro.core import ColdStartEngine
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer
+    from repro.models.api import get_config
+    from repro.store.store import BandwidthModel, WeightStore, deploy_model
+
+    # a mid-size LM (~155 MB f32) so retrieval dominates the pipeline at
+    # 200 MB/s — every sharded axis divides 4 (no replication fallback)
+    cfg = dataclasses.replace(
+        get_config("smollm-360m", smoke=True), name="sharded-bench",
+        n_layers=8, d_model=384, n_heads=4, n_kv_heads=4, d_ff=3072,
+        vocab_size=12288)
+    model = transformer.build(cfg)
+    root = tempfile.mkdtemp(prefix="cicada-sharded-bench-")
+    deploy_model(WeightStore(root), model, cfg.name, jax.random.key(0))
+    batch = common.make_batch(cfg)
+
+    rows = []
+    load_ms = {}
+    for n in (1, 2, 4):
+        if n > jax.device_count():
+            print(f"# mesh={n}: only {jax.device_count()} devices, "
+                  f"skipping (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count=4)")
+            continue
+        store = WeightStore(root, BandwidthModel(args.bandwidth_mbps, 0.2,
+                                                 channels=n))
+        mesh = make_serving_mesh((1, n)) if n > 1 else None
+        eng = ColdStartEngine(model, cfg.name, store, strategy="cicada",
+                              mesh=mesh)
+        eng.warmup(batch)
+        eng.load(batch)                   # warm assemble jit / put paths
+        best = None
+        for _ in range(3):
+            res = eng.load(batch)
+            if best is None or res.trace.total_time() < \
+                    best.trace.total_time():
+                best = res
+        R = [e for e in best.trace.events if e.stage == "R"]
+        r_window = max(e.t_end for e in R) - min(e.t_start for e in R)
+        load_ms[n] = best.trace.total_time() * 1e3
+        rows.append([f"sharded/mesh{n}/load_ms", load_ms[n],
+                     r_window * 1e3])
+    if 1 in load_ms and 4 in load_ms:
+        rows.append(["sharded/mesh4_vs_mesh1/speedup",
+                     load_ms[1] / load_ms[4], 0.0])
+    return rows
+
+
 def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
         concurrencies=(1, 4)):
     args = args or common.std_parser(models=["resnet50"]).parse_args([])
     n_invocations = getattr(args, "invocations", None) or n_invocations
+    if getattr(args, "mesh", False):
+        rows = mesh_run(args)
+        common.print_csv(["name", "load_ms", "derived"], rows)
+        _write_json(args, rows, "sharded")
+        return rows
     if getattr(args, "workload", "trace") == "generate":
         rows = generate_run(args)
         common.print_csv(["name", "value", "derived"], rows)
@@ -265,8 +358,9 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
 def _write_json(args, rows, bench: str):
     json_out = getattr(args, "json_out", None)
     if json_out:
-        header = ["name", "value", "derived"] if bench == "generate" \
-            else ["name", "us_per_call", "derived"]
+        header = {"generate": ["name", "value", "derived"],
+                  "sharded": ["name", "load_ms", "derived"]}.get(
+            bench, ["name", "us_per_call", "derived"])
         with open(json_out, "w") as f:
             json.dump({"bench": bench, "header": header, "rows": rows},
                       f, indent=2)
@@ -292,6 +386,10 @@ def main(argv=None):
     ap.add_argument("--gen-requests", type=int, default=None,
                     help="generation requests per concurrency level "
                          "(default: 8 quick / 16 full)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard-granular cold-start sweep over device "
+                         "meshes 1/2/4 (one store channel per device); "
+                         "emits the BENCH_sharded.json rows")
     return run(ap.parse_args(argv))
 
 

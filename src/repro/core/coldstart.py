@@ -5,7 +5,9 @@ as :class:`~repro.core.units.PipelineUnit` objects on one event-driven
 :class:`~repro.core.units.PipelineRuntime`):
 
   * **Layer unit** — constructs unit structures in order (MiniLoader or
-    PISeL-faithful numerical init);
+    PISeL-faithful numerical init); under a mesh every leaf's
+    NamedSharding is resolved here, so the structure handed downstream
+    is already the sharded layout;
   * **Weight unit** — applies retrieved weights.  Under the
     WeightDecoupler, retrieval streams were issued at request arrival on
     an I/O pool and application is out-of-order; under PISeL, retrieval
@@ -14,9 +16,18 @@ as :class:`~repro.core.units.PipelineUnit` objects on one event-driven
     are applied (and layer i-1 executed): the triggering request is
     answered *while the model is still loading*.
 
-After the pipeline drains, the per-unit parameters are assembled into
-the steady-state (scan-stacked) representation and handed to the serving
-engine for warm requests.
+**Shard-granular cold starts** (``mesh=`` + ``rules=``): the unit of
+pipelined retrieval becomes a *(layer-unit, shard)* pair — one stream
+per mesh device, each reading only the byte ranges its device owns and
+committing them to that device the moment they land (see
+:mod:`repro.core.shards`).  The pipeline's compute units still run the
+triggering request on the default device from the host-merged leaves —
+numerically *identical* to the single-device path (sharded collectives
+never touch the first request's logits) — while the steady-state
+(scan-stacked) parameters are assembled **on the mesh** from the
+already-committed shards and handed to the serving engine for warm
+tensor-parallel requests.  A mesh of one device degenerates to the
+seed's unit-granular path exactly.
 """
 from __future__ import annotations
 
@@ -32,12 +43,15 @@ from repro.core import miniloader
 from repro.core.decoupler import WeightDecoupler
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import PriorityAwareScheduler
+from repro.core.shards import ShardedUnitData, UnitShardPlan, plan_unit
 from repro.core.strategies import Strategy, get_strategy
-from repro.core.units import (APPLIED, OUTPUT, PipelineContext,
+from repro.core.units import (APPLIED, OUTPUT, SHARDED, PipelineContext,
                               PipelineRuntime, PipelineState, standard_units)
+from repro.distributed.sharding import (ShardingRules, leaf_specs,
+                                        param_specs, serve_rules)
 from repro.kernels import ops
 from repro.store.cache import WeightCache
-from repro.store.store import WeightStore, unflatten_unit
+from repro.store.store import WeightStore, leaf_path_name, unflatten_unit
 
 PyTree = Any
 
@@ -45,7 +59,8 @@ PyTree = Any
 @dataclasses.dataclass
 class LoadResult:
     logits: jax.Array            # first-request output (computed in-pipeline)
-    params: PyTree               # assembled steady-state parameters
+    params: PyTree               # assembled steady-state parameters (on the
+                                 # mesh, sharded, when the engine has one)
     trace: PipelineTrace
     strategy: str
 
@@ -54,13 +69,21 @@ class ColdStartEngine:
     def __init__(self, model, model_name: str, store: WeightStore, *,
                  strategy: str = "cicada", io_workers: int = 4,
                  chunk_bytes: int = 1 << 20,
-                 apply_dtype=None, cache: Optional[WeightCache] = None):
+                 apply_dtype=None, cache: Optional[WeightCache] = None,
+                 mesh=None, rules: Optional[ShardingRules] = None):
         """apply_dtype: cast weights to this dtype at application time
         (None -> keep stored dtype).
 
         cache: node-local shared WeightCache — decoupled retrieval
         streams consult it before issuing I/O, so scale-out cold starts
-        of the same model single-flight every store read."""
+        of the same model single-flight every store read (per shard,
+        under a mesh).
+
+        mesh/rules: shard-granular cold start — retrieval fans out into
+        one stream per mesh device and the assembled params live on the
+        mesh as NamedSharding arrays.  rules defaults to
+        ``serve_rules()``; a 1-device mesh degenerates to the seed
+        path."""
         self.model = model
         self.model_name = model_name
         self.store = store
@@ -69,7 +92,15 @@ class ColdStartEngine:
         self.chunk_bytes = chunk_bytes
         self.apply_dtype = apply_dtype
         self.cache = cache
+        if mesh is not None and mesh.size <= 1:
+            mesh = None                    # degenerate: exact seed path
+        self.mesh = mesh
+        self.rules = (rules if rules is not None else serve_rules()) \
+            if mesh is not None else None
         self._jit_apply: Dict[str, Any] = {}
+        self._shard_plans: Dict[str, UnitShardPlan] = {}
+        self._unit_specs: Dict[str, Dict[str, Any]] = {}
+        self._assemble_jit = None
 
     # -------------------------------------------------------------- helpers
     def _apply_fn(self, unit: str):
@@ -92,12 +123,40 @@ class ColdStartEngine:
             state = self._apply_fn(name)(p, state)
         jax.block_until_ready(state["logits"])
 
-    def _apply_leaves(self, unit: str, abstract: PyTree, leaves) -> PyTree:
+    def _plan(self, unit: str) -> UnitShardPlan:
+        """Static per-unit shard plan (cached across loads)."""
+        if unit not in self._shard_plans:
+            self._shard_plans[unit] = plan_unit(
+                self.store, self.model_name, unit,
+                self.model.abstract_unit(unit), self.mesh, self.rules,
+                apply_dtype=self.apply_dtype)
+        return self._shard_plans[unit]
+
+    def _specs(self, unit: str) -> Dict[str, Any]:
+        if unit not in self._unit_specs:
+            self._unit_specs[unit] = leaf_specs(
+                self.model.abstract_unit(unit), self.mesh, self.rules)
+        return self._unit_specs[unit]
+
+    def _apply_leaves(self, unit: str, abstract: PyTree, leaves,
+                      prefetched=None) -> PyTree:
         """The weight-application compute phase: dequant/cast (fused
-        ``weight_transform`` kernel) + device placement."""
+        ``weight_transform`` kernel) + device placement (one batched
+        transfer per unit).
+
+        prefetched: {leaf: default-device array} already placed by the
+        shard committer — those leaves skip the transfer here and A
+        only waits on them."""
         flat = {}
+        put_names, put_arrs = [], []
         for name, (arr, scale) in leaves.items():
-            if scale is not None:                      # int8 extent
+            transformed = scale is not None or (
+                self.apply_dtype is not None and
+                np.issubdtype(arr.dtype, np.floating))
+            if prefetched is not None and name in prefetched \
+                    and not transformed:
+                flat[name] = prefetched[name]
+            elif scale is not None:                    # int8 extent
                 out_dt = self.apply_dtype or jnp.float32
                 deq = ops.weight_transform(jnp.asarray(arr),
                                            jnp.asarray(scale),
@@ -110,17 +169,92 @@ class ColdStartEngine:
                     if arr.ndim >= 2 else jnp.asarray(arr)[None],
                     None, out_dtype=self.apply_dtype).reshape(arr.shape)
             else:
-                flat[name] = jax.device_put(arr)
+                put_names.append(name)
+                put_arrs.append(arr)
+        if put_arrs:
+            flat.update(zip(put_names, jax.device_put(put_arrs)))
         tree = unflatten_unit(abstract, flat)
         return jax.block_until_ready(tree)
+
+    def _apply_unit(self, unit: str, abstract: PyTree, leaves):
+        """A_i: returns ``(compute_tree, mesh_tree_or_None)``.
+
+        compute_tree lives on the default device and feeds the
+        pipeline's E — byte-for-byte the single-device application, so
+        the first request's logits are bit-identical regardless of the
+        mesh.  mesh_tree (mesh mode only) is the unit's steady-state
+        sharded leaves: stitched from the shards' eagerly-committed
+        device buffers where possible, ``device_put`` against the
+        resolved NamedSharding for transformed (dequant/cast) leaves.
+        """
+        data: Optional[ShardedUnitData] = None
+        if isinstance(leaves, ShardedUnitData):
+            data = leaves
+            leaves = data.host_leaves()
+        compute = self._apply_leaves(
+            unit, abstract, leaves,
+            prefetched=data.compute_bufs if data is not None else None)
+        if self.mesh is None:
+            return compute, None
+        specs = data.plan.specs if data is not None else self._specs(unit)
+        flatc = {
+            leaf_path_name(path): leaf
+            for path, leaf in jax.tree_util.tree_flatten_with_path(compute)[0]}
+        dev = {}
+        # leaves without committed buffers are placed here: raw
+        # per-device transfers in one batch + a metadata stitch (a
+        # device_put against a NamedSharding would route through the
+        # resharding machinery — far slower on the apply path)
+        pending = []                    # (name, sharding, imap)
+        put_arrs, put_devs = [], []
+        for name, (arr, scale) in leaves.items():
+            transformed = scale is not None or (
+                self.apply_dtype is not None and
+                np.issubdtype(arr.dtype, np.floating))
+            if data is not None and not transformed and \
+                    data.plan.commit[name]:
+                dev[name] = data.global_array(name)    # metadata stitch
+                continue
+            sharding = specs[name]
+            host = np.asarray(flatc[name]) if transformed else arr
+            imap = sharding.devices_indices_map(tuple(host.shape))
+            pending.append((name, sharding, imap))
+            for d, idx in imap.items():
+                put_arrs.append(host[idx])
+                put_devs.append(d)
+        if put_arrs:
+            bufs = iter(jax.device_put(put_arrs, put_devs))
+            for name, sharding, imap in pending:
+                shape = tuple(self._leaf_shape(abstract, name))
+                dev[name] = jax.make_array_from_single_device_arrays(
+                    shape, sharding, [next(bufs) for _ in imap])
+        # not block_until_ready: only the compute tree gates E — the
+        # steady-state placement drains during E and is awaited by the
+        # final assemble
+        mesh_tree = unflatten_unit(abstract, dev)
+        return compute, mesh_tree
+
+    def _assemble(self, state: PipelineState) -> PyTree:
+        """Stack the applied units into the steady-state params — on
+        the mesh (sharded, from the committed per-device buffers) when
+        the engine has one, on the default device otherwise."""
+        if self.mesh is None:
+            return self.model.assemble(state.peek(APPLIED))
+        return self._assemble_sharded(state.peek(SHARDED))
+
+    def _assemble_sharded(self, units_dev: Dict[str, PyTree]) -> PyTree:
+        if self._assemble_jit is None:
+            out_specs = param_specs(self.model.abstract(), self.mesh,
+                                    self.rules)
+            self._assemble_jit = jax.jit(self.model.assemble,
+                                         out_shardings=out_specs)
+        return jax.block_until_ready(self._assemble_jit(units_dev))
 
     @staticmethod
     def _leaf_shape(abstract: PyTree, name: str):
         flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
         for path, leaf in flat:
-            n = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                         for p in path)
-            if n == name:
+            if leaf_path_name(path) == name:
                 return leaf.shape
         raise KeyError(name)
 
@@ -144,10 +278,12 @@ class ColdStartEngine:
         trace = PipelineTrace()
         scheduler = PriorityAwareScheduler(enabled=strat.scheduler)
         state = PipelineState()
+        sharded = self.mesh is not None and strat.decouple
         dec = WeightDecoupler(self.store, self.model_name, scheduler, trace,
                               io_workers=self.io_workers,
                               chunk_bytes=self.chunk_bytes, state=state,
-                              cache=self.cache if strat.decouple else None)
+                              cache=self.cache if strat.decouple else None,
+                              plan_fn=self._plan if sharded else None)
         trace.start()
 
         try:
@@ -171,14 +307,18 @@ class ColdStartEngine:
         for u, k in zip(units, keys):                    # all L
             with trace.record("L", u):
                 constructed[u] = miniloader.construct_unit(
-                    self.model, u, k, mini=False)
+                    self.model, u, k, mini=False,
+                    mesh=self.mesh, rules=self.rules)
         applied = {}
+        sharded = {}
         for u in units:                                  # monolithic W+A
             t0 = time.monotonic()
             leaves = dec.fetch_sync(u)                   # blocking I/O
             t_io = time.monotonic()
-            applied[u] = self._apply_leaves(u, constructed[u].abstract,
-                                            leaves)
+            applied[u], mesh_tree = self._apply_unit(
+                u, constructed[u].abstract, leaves)
+            if mesh_tree is not None:
+                sharded[u] = mesh_tree
             t1 = time.monotonic()
             trace.add_event("R", u, t0, t_io)            # unit idles (DMA)
             trace.add_event("A", u, t_io, t1)
@@ -192,7 +332,8 @@ class ColdStartEngine:
                     state["logits" if u == units[-1] else "x"])
                 if u == units[-1] and on_logits is not None:
                     on_logits(state["logits"])
-        params = self.model.assemble(applied)
+        params = self._assemble_sharded(sharded) if self.mesh is not None \
+            else self.model.assemble(applied)
         return LoadResult(state["logits"], params, trace,
                           self.strategy.name)
 
@@ -207,10 +348,11 @@ class ColdStartEngine:
         ctx = PipelineContext(model=self.model, units=list(units),
                               keys=list(keys), batch=batch, strategy=strat,
                               trace=trace, decoupler=dec, scheduler=scheduler,
-                              state=state, apply_leaves=self._apply_leaves,
-                              apply_fn=self._apply_fn, on_output=on_logits)
+                              state=state, apply_leaves=self._apply_unit,
+                              apply_fn=self._apply_fn, on_output=on_logits,
+                              mesh=self.mesh, rules=self.rules)
         PipelineRuntime(standard_units(ctx), state).run()
 
-        params = self.model.assemble(state.peek(APPLIED))
+        params = self._assemble(state)
         return LoadResult(state.get(OUTPUT, "logits"), params, trace,
                           strat.name)

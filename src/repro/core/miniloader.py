@@ -36,11 +36,14 @@ PyTree = Any
 class ConstructedUnit:
     """A layer structure produced by the Layer construction unit."""
     name: str
-    abstract: PyTree                     # ShapeDtypeStruct tree
+    abstract: PyTree                     # ShapeDtypeStruct tree; under a
+                                         # mesh every leaf carries its
+                                         # resolved NamedSharding
     init_params: Optional[PyTree]        # PISeL path: materialized init
     placeholders: Optional[Dict[str, np.ndarray]]  # Mini path: bit-packed
     mem_bytes: int                       # residency between L-end and A-end
     t_construct_end: float = 0.0
+    specs: Optional[Dict[str, Any]] = None   # leaf path -> NamedSharding
 
     @property
     def mini(self) -> bool:
@@ -57,30 +60,54 @@ def full_bytes(abstract: PyTree) -> int:
 
 
 def construct_unit(model, name: str, key: jax.Array, *,
-                   mini: bool) -> ConstructedUnit:
+                   mini: bool, mesh=None, rules=None) -> ConstructedUnit:
     """The pipeline's L_i.
 
     mini=False — PISeL-faithful: run the real numerical initialization
     (this is deliberately the expensive path the paper measures).
     mini=True — MiniLoader: eval_shape + 1-bit placeholders.
+
+    mesh/rules — shard-granular cold start: every leaf's NamedSharding
+    is resolved here (MaxText-style logical-axis rules) and attached to
+    the abstract structure, so the structural container the pipeline
+    hands downstream *is* the sharded layout the retrieval streams fill
+    and ``jax.device_put`` commits against.
     """
+    specs = None
+    if mesh is not None:
+        from repro.distributed.sharding import leaf_specs
+        specs = leaf_specs(model.abstract_unit(name), mesh, rules)
     if mini:
+        from repro.store.store import leaf_path_name
         abstract = model.abstract_unit(name)
         flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
         placeholders: Dict[str, np.ndarray] = {}
         mem = 0
+        vals = []
         for path, leaf in flat:
-            pname = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                             for p in path)
+            pname = leaf_path_name(path)
             n = int(np.prod(leaf.shape))
             packed = np.zeros((n + 7) // 8, np.uint8)   # 1 bit / param
             placeholders[pname] = packed
             mem += packed.nbytes
+            vals.append(leaf if specs is None else jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype, sharding=specs[pname]))
+        if specs is not None:        # abstract params as *sharded* leaves
+            treedef = jax.tree_util.tree_structure(abstract)
+            abstract = jax.tree_util.tree_unflatten(treedef, vals)
         return ConstructedUnit(name, abstract, None, placeholders, mem,
-                               time.monotonic())
+                               time.monotonic(), specs)
+    from repro.store.store import leaf_path_name
     params = model.init_unit(name, key)
     params = jax.block_until_ready(params)
-    abstract = jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    vals = []
+    for path, leaf in flat:
+        pname = leaf_path_name(path)
+        vals.append(jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=None if specs is None else specs[pname]))
+    abstract = jax.tree_util.tree_unflatten(treedef, vals)
     return ConstructedUnit(name, abstract, params, None,
-                           full_bytes(abstract), time.monotonic())
+                           full_bytes(abstract), time.monotonic(), specs)

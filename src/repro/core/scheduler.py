@@ -6,10 +6,21 @@ completion time ``(t_issue + a) + D_{W_i}`` — every other in-flight
 retrieval stream is suspended (cooperative gates cleared) so W_i gets
 the full I/O bandwidth.  Streams resume when W_i completes.
 
+Under shard-granular cold starts one layer unit is retrieved by several
+concurrent *shard streams* (one per mesh device, each on its own
+simulated-device channel).  Streams register as ``(unit, shard)``;
+Algorithm 1 still reasons about *units* — the pipeline needs unit i's
+weights, which land when its **last** shard lands — so a unit's
+expected completion is the max over its in-flight shard streams, and
+prioritizing a late unit suspends every stream of every *other* unit
+(its own shards keep all their channels).
+
 Expected durations D_W are size-based: ``nbytes / bw_estimate`` with an
 EMA of observed stream bandwidth (the paper's "records the execution
-times of each ... weight file (W) operation").  ``a`` is the measured
-pipeline-unit scheduling overhead.
+times of each ... weight file (W) operation").  Shard streams observe
+per-channel bandwidth — their sizes are per-shard, so the deadline of a
+shard stream is exactly its own channel's expected service time.  ``a``
+is the measured pipeline-unit scheduling overhead.
 
 Complexity matches the paper: O(n) over in-flight streams to suspend,
 O(1) space per stream.
@@ -19,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Dict, Optional
+from typing import Dict, Hashable, Optional, Tuple
 
 HIGH = "HIGH"
 NORMAL = "NORMAL"
@@ -30,6 +41,7 @@ class StreamState:
     unit: str
     nbytes: int
     gate: threading.Event                 # set = may run; cleared = suspended
+    shard: Hashable = 0                   # shard id ((unit, shard) is the key)
     t_issue: float = 0.0
     t_done: Optional[float] = None
     bytes_done: int = 0
@@ -45,56 +57,60 @@ class PriorityAwareScheduler:
     def __init__(self, *, bw_bytes_per_s: float = 1e9,
                  a_overhead_s: float = 1e-3, enabled: bool = True):
         self.enabled = enabled
-        self._streams: Dict[str, StreamState] = {}
+        self._streams: Dict[Tuple[str, Hashable], StreamState] = {}
         self._lock = threading.Lock()
         self._bw = bw_bytes_per_s          # EMA of observed bandwidth
         self._a = a_overhead_s
-        self._critical: Optional[str] = None
+        self._critical: Optional[str] = None      # unit being prioritized
         self.suspend_count = 0             # observability / tests
 
     # ------------------------------------------------------------- streams
-    def register(self, unit: str, nbytes: int) -> StreamState:
-        st = StreamState(unit, nbytes, threading.Event())
+    def register(self, unit: str, nbytes: int, shard: Hashable = 0
+                 ) -> StreamState:
+        st = StreamState(unit, nbytes, threading.Event(), shard)
         st.gate.set()
         with self._lock:
-            self._streams[unit] = st
+            self._streams[(unit, shard)] = st
         return st
 
-    def on_issue(self, unit: str):
+    def on_issue(self, unit: str, shard: Hashable = 0):
         with self._lock:
-            self._streams[unit].t_issue = time.monotonic()
+            self._streams[(unit, shard)].t_issue = time.monotonic()
 
-    def on_progress(self, unit: str, done: int, total: int):
+    def on_progress(self, unit: str, done: int, total: int,
+                    shard: Hashable = 0):
         with self._lock:
-            self._streams[unit].bytes_done = done
+            self._streams[(unit, shard)].bytes_done = done
 
-    def mark_external(self, unit: str, external: bool = True):
-        """The unit is being served by the node-local WeightCache (a
+    def mark_external(self, unit: str, external: bool = True,
+                      shard: Hashable = 0):
+        """The stream is being served by the node-local WeightCache (a
         hit, or a wait on another load's read): it is not a local device
         read, so Algorithm 1 must neither prioritize it (suspending
         local streams cannot speed it up — and doing so across two
         concurrent loads that lead each other's units would deadlock)
         nor arm a bandwidth-based deadline for it."""
         with self._lock:
-            self._streams[unit].external = external
+            self._streams[(unit, shard)].external = external
 
-    def on_complete(self, unit: str, *, observed: bool = True):
+    def on_complete(self, unit: str, *, observed: bool = True,
+                    shard: Hashable = 0):
         """``observed=False``: the stream finished without a device
         read (cache hit) — complete it without folding the ~zero
         duration into the bandwidth EMA."""
         with self._lock:
-            st = self._streams[unit]
+            st = self._streams[(unit, shard)]
             st.t_done = time.monotonic()
             if observed:
                 dur = max(st.t_done - st.t_issue, 1e-9)
                 obs = st.nbytes / dur
                 self._bw = 0.7 * self._bw + 0.3 * obs
-            if self._critical == unit:
+            if self._critical == unit and self._unit_done_locked(unit):
                 self._critical = None
                 for other in self._streams.values():
                     other.gate.set()       # resume suspended streams
 
-    def on_error(self, unit: str):
+    def on_error(self, unit: str, shard: Hashable = 0):
         """A stream failed: mark it done and lift any suspension so no
         other reader stays parked on a cleared gate forever.  Without
         this, a failed critical stream would leave ``_critical`` set
@@ -102,61 +118,86 @@ class PriorityAwareScheduler:
         node-local WeightCache's single-flight leader for a unit —
         blocked indefinitely, wedging all future loads of that unit."""
         with self._lock:
-            st = self._streams.get(unit)
+            st = self._streams.get((unit, shard))
             if st is not None and st.t_done is None:
                 st.t_done = time.monotonic()
             self._critical = None
             for other in self._streams.values():
                 other.gate.set()
 
+    def _unit_done_locked(self, unit: str) -> bool:
+        return all(st.completed for st in self._streams.values()
+                   if st.unit == unit)
+
     # ---------------------------------------------------------- Algorithm 1
-    def expected_completion(self, unit: str) -> float:
-        st = self._streams[unit]
+    def _expected_completion_locked(self, st: StreamState) -> float:
         return (st.t_issue + self._a) + st.nbytes / max(self._bw, 1.0)
+
+    def expected_completion(self, unit: str, shard: Hashable = 0) -> float:
+        with self._lock:
+            return self._expected_completion_locked(
+                self._streams[(unit, shard)])
 
     def time_until_expected(self, unit: str) -> Optional[float]:
         """Seconds until *unit*'s expected completion — the wake-up
         deadline an event-driven waiter arms to run Algorithm 1 at
-        exactly the right moment.  None = no deadline applies (scheduler
-        disabled, stream unknown / not yet issued / completed, or the
-        stream is already the prioritized critical one)."""
+        exactly the right moment.  A sharded unit completes when its
+        last shard lands, so the deadline is the max over its issued,
+        non-external, incomplete shard streams.  None = no deadline
+        applies (scheduler disabled, unit unknown / nothing issued yet
+        / completed, or the unit is already the prioritized critical
+        one)."""
         if not self.enabled:
             return None
         with self._lock:
-            st = self._streams.get(unit)
-            if st is None or st.completed or st.t_issue == 0.0 or \
-                    st.external or self._critical == unit:
+            if self._critical == unit:
                 return None
-            return max(0.0, self.expected_completion(unit) -
-                       time.monotonic())
+            exp = None
+            for st in self._streams.values():
+                if st.unit != unit or st.completed or st.t_issue == 0.0 \
+                        or st.external:
+                    continue
+                e = self._expected_completion_locked(st)
+                exp = e if exp is None else max(exp, e)
+            if exp is None:
+                return None
+            return max(0.0, exp - time.monotonic())
 
     def adjust_priority(self, unit: str) -> str:
         """Algorithm 1: called for the layer the pipeline needs next.
 
-        If W_unit is past its expected completion and still running,
-        suspend every other in-flight stream and mark it HIGH.
+        If any of W_unit's shard streams is past its expected completion
+        and still running, suspend every other unit's in-flight streams
+        and mark the unit HIGH (all of its own shards keep their
+        channels).
         """
         if not self.enabled:
             return NORMAL
         now = time.monotonic()
         with self._lock:
-            st = self._streams.get(unit)
-            if st is None or st.completed or st.t_issue == 0.0 or \
-                    st.external:
+            late = False
+            for st in self._streams.values():
+                if st.unit != unit or st.completed or st.t_issue == 0.0 \
+                        or st.external:
+                    continue
+                if now >= self._expected_completion_locked(st):
+                    late = True
+                    break
+            if not late:
                 return NORMAL
-            if now >= self.expected_completion(unit):
-                for other in self._streams.values():       # O(n)
-                    if other.unit != unit and not other.completed:
-                        other.gate.clear()                  # block W
-                        self.suspend_count += 1
-                st.gate.set()
-                self._critical = unit
-                return HIGH
-            return NORMAL
+            for other in self._streams.values():            # O(n)
+                if other.unit != unit and not other.completed:
+                    other.gate.clear()                      # block W
+                    self.suspend_count += 1
+            for own in self._streams.values():
+                if own.unit == unit:
+                    own.gate.set()
+            self._critical = unit
+            return HIGH
 
     # --------------------------------------------------------------- lookup
-    def gate(self, unit: str) -> threading.Event:
-        return self._streams[unit].gate
+    def gate(self, unit: str, shard: Hashable = 0) -> threading.Event:
+        return self._streams[(unit, shard)].gate
 
     def stats(self) -> dict:
         with self._lock:

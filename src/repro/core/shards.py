@@ -1,0 +1,309 @@
+"""Shard-granular retrieval plans: (layer-unit, shard) is the unit of
+pipelined work.
+
+λScale and HydraServe/ParaServe show that parallelizing the *load*
+across workers/devices is the dominant lever for serverless LLM cold
+starts.  This module brings that into Cicada's pipeline: a
+:class:`UnitShardPlan` splits one layer unit's weight extent into one
+retrieval stream per mesh device, each stream reading only the byte
+ranges of the leaf slices its device owns (``WeightStore.
+read_leaf_slice``).  Streams are independent — they draw from separate
+simulated-device channels, carry their own Priority-Aware-Scheduler
+gates/deadlines, and are cached per ``(model, unit, shard)``.
+
+Placement is *eager*: the moment a shard stream lands, its leaf slices
+are committed to their target devices with ``jax.device_put`` —
+host-to-device transfer overlaps the remaining shards' I/O instead of
+serializing after the full unit (":ref:`stream weights straight onto
+the mesh`").  A unit's weight-application event fires when its *last*
+shard lands: the host-side leaves are merged for the in-pipeline
+compute (bit-identical to the single-device path — the E units never
+run sharded collectives), and the steady-state leaf is assembled from
+the already-committed per-device buffers with
+``jax.make_array_from_single_device_arrays`` (a metadata stitch, no
+data movement).
+
+Leaves whose resolved spec is replication (including any axis that
+does not divide its dimension — ``_guarded_spec``'s fallback) and
+int8-quantized leaves (their payload interleaves values and scales,
+and dequantization is the *weight application* compute phase) are read
+whole by exactly one stream, round-robined across shards for balance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, leaf_specs
+from repro.store.store import slice_byte_runs
+
+# Shard slices whose contiguous runs would fall below this floor are
+# read whole by one stream instead (still *committed* sharded): a
+# strided sub-KB run pattern pays more in seeks than parallel links
+# save.  Real deployments with head-sharded attention leaves stay well
+# above it (32 heads x 128 dims x 4B = 16 KiB runs).
+RUN_FLOOR_BYTES = 1024
+
+# Leaves below this per-device size skip the eager in-stream commit and
+# are placed in one batched device_put at weight application: the
+# per-dispatch overhead of committing dozens of small buffers from I/O
+# threads costs more wall time than the transfer overlap saves.  The
+# heavy leaves (embeddings, FFN matrices) — where overlap matters — are
+# far above it.
+COMMIT_FLOOR_BYTES = 256 * 1024
+
+PyTree = Any
+Mesh = Any           # jax.sharding.Mesh
+Index = Tuple[Any, ...]          # per-dim slices into a leaf
+# one retrieved piece: (leaf, array, scale_or_None, index_or_None)
+ShardPayload = List[Tuple[str, np.ndarray, Optional[np.ndarray],
+                          Optional[Index]]]
+
+
+@dataclasses.dataclass
+class LeafPiece:
+    """One shard stream's share of one leaf."""
+    leaf: str
+    index: Optional[Index]       # None -> whole payload (replicated/quant)
+    nbytes: int                  # bytes this stream reads for the piece
+    devices: Tuple[Any, ...]     # eager-commit targets
+
+
+@dataclasses.dataclass
+class UnitShardPlan:
+    """Static per-(model, unit) retrieval plan for a mesh."""
+    unit: str
+    mesh: Mesh
+    specs: Dict[str, Any]        # leaf -> NamedSharding
+    pieces: List[List[LeafPiece]]          # per shard
+    shapes: Dict[str, Tuple[int, ...]]     # leaf -> full shape
+    dtypes: Dict[str, str]                 # leaf -> stored dtype
+    quant: Dict[str, bool]                 # leaf -> int8-stored
+    commit: Dict[str, bool]                # leaf -> eager device commit
+    transformed: Dict[str, bool]           # leaf -> dequant/cast at apply
+    tag: str                               # mesh-shape + rules fingerprint
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.pieces)
+
+    def shard_nbytes(self, shard: int) -> int:
+        return sum(p.nbytes for p in self.pieces[shard])
+
+
+def _normalize(index: Index, shape: Tuple[int, ...]) -> Tuple:
+    out = []
+    for s, dim in zip(index, shape):
+        out.append((0 if s.start is None else int(s.start),
+                    dim if s.stop is None else int(s.stop)))
+    return tuple(out)
+
+
+def plan_tag(mesh, rules: ShardingRules) -> str:
+    """Deterministic identity of a (mesh shape, rules) combination —
+    part of the shard cache key: the same unit planned under different
+    rules (or mesh shape) holds different byte ranges, and a shared
+    WeightCache must never serve one as the other."""
+    import zlib
+    desc = repr(sorted(rules.mapping.items())).encode()
+    return "%s#%08x" % ("x".join(str(s) for s in mesh.devices.shape),
+                        zlib.crc32(desc) & 0xFFFFFFFF)
+
+
+def plan_unit(store, model_name: str, unit: str, abstract_unit: PyTree,
+              mesh, rules: ShardingRules,
+              apply_dtype=None) -> UnitShardPlan:
+    """One retrieval stream per mesh device; each distinct leaf slice is
+    owned by the first device that holds it (replicas commit without
+    re-reading), whole-payload leaves round-robin across streams.
+
+    apply_dtype: the engine's weight-application cast target — leaves
+    the apply path will transform (quantized, or floating under a
+    cast) are never eagerly committed: their raw-dtype device buffers
+    would be discarded and re-transferred post-transform."""
+    devices = list(mesh.devices.flatten())
+    pos = {d: i for i, d in enumerate(devices)}
+    n = len(devices)
+    specs = leaf_specs(abstract_unit, mesh, rules)
+    recs = store.manifest(model_name)["units"][unit]["extents"]
+    pieces: List[List[LeafPiece]] = [[] for _ in range(n)]
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    dtypes: Dict[str, str] = {}
+    quant: Dict[str, bool] = {}
+    commit: Dict[str, bool] = {}
+    transformed: Dict[str, bool] = {}
+    rr = 0
+    for rec in recs:
+        leaf = rec["path"]
+        shape = tuple(rec["shape"])
+        shapes[leaf] = shape
+        dtypes[leaf] = rec["dtype"]
+        quant[leaf] = rec.get("quant") == "int8"
+        transformed[leaf] = quant[leaf] or (
+            apply_dtype is not None and
+            np.issubdtype(np.dtype(rec["dtype"]), np.floating))
+        sharding = specs[leaf]
+        replicated = all(ax is None for ax in tuple(sharding.spec))
+        per_device = rec["nbytes"] if replicated else rec["nbytes"] // n
+        commit[leaf] = not transformed[leaf] and \
+            per_device >= COMMIT_FLOOR_BYTES
+        whole = quant[leaf] or replicated
+        groups: Dict[Tuple, Tuple[Index, List[Any]]] = {}
+        if not whole:
+            imap = sharding.devices_indices_map(shape)
+            itemsize = np.dtype(rec["dtype"]).itemsize
+            for d in devices:
+                idx = imap[d]
+                key = _normalize(idx, shape)
+                groups.setdefault(key, (idx, []))[1].append(d)
+            for idx, _ds in groups.values():
+                runs = slice_byte_runs(shape, itemsize, idx)
+                if runs and min(nb for _, nb in runs) < RUN_FLOOR_BYTES:
+                    whole = True        # strided fine-grained slices:
+                    break               # read once, commit sharded
+        if whole:
+            pieces[rr % n].append(
+                LeafPiece(leaf, None, rec["nbytes"], tuple(devices)))
+            rr += 1
+            continue
+        for idx, ds in groups.values():
+            owner = min(pos[d] for d in ds)
+            nb = store.leaf_slice_nbytes(model_name, unit, leaf, idx)
+            pieces[owner].append(LeafPiece(leaf, idx, nb, tuple(ds)))
+    return UnitShardPlan(unit, mesh, specs, pieces, shapes, dtypes, quant,
+                         commit, transformed, plan_tag(mesh, rules))
+
+
+class ShardedUnitData:
+    """Per-load accumulation of one unit's arriving shards.
+
+    ``add_shard`` (called on I/O threads, one call per shard) merges
+    the host-side slices into full leaves for the pipeline's compute
+    units and eagerly commits each slice to its target devices.  When
+    the last shard has landed, :meth:`host_leaves` feeds the standard
+    weight-application path and :meth:`global_array` stitches the
+    committed buffers into the steady-state sharded leaf.
+    """
+
+    def __init__(self, plan: UnitShardPlan):
+        self.plan = plan
+        self._lock = threading.Lock()
+        self._host: Dict[str, np.ndarray] = {}
+        self._scales: Dict[str, Optional[np.ndarray]] = {}
+        self._bufs: Dict[Tuple[str, int], jax.Array] = {}
+        self._compute: Optional[Dict[str, jax.Array]] = None
+        self._arrived = 0
+
+    def host_dest(self, leaf: str, index: Index) -> np.ndarray:
+        """A writable view of ``leaf[index]`` in the preassembled full
+        host leaf — shard reads gather straight into it (zero staging
+        copies on the cache-less path)."""
+        with self._lock:
+            full = self._host.get(leaf)
+            if full is None:
+                full = np.empty(self.plan.shapes[leaf],
+                                np.dtype(self.plan.dtypes[leaf]))
+                self._host[leaf] = full
+                self._scales[leaf] = None
+        return full[tuple(index)]
+
+    def add_shard(self, shard: int, payload: ShardPayload,
+                  merged: bool = False) -> bool:
+        """``merged=True``: ranged pieces were gathered straight into
+        the full host leaves via :meth:`host_dest` — only device
+        placement remains here.  Returns True for exactly one caller:
+        the one whose shard completed the unit (after the compute
+        prefetch below is in place — the publish signal)."""
+        plan = self.plan
+        # all of this shard's device commits go out as ONE batched
+        # device_put (per-piece dispatch overhead would rival the I/O
+        # it overlaps at higher shard counts)
+        put_keys: List[Tuple[str, int]] = []
+        put_arrs: List[np.ndarray] = []
+        put_devs: List[Any] = []
+        for (leaf, arr, scale, index), piece in zip(payload,
+                                                    plan.pieces[shard]):
+            if index is None:                        # whole-payload leaf
+                with self._lock:
+                    self._host[leaf] = arr
+                    self._scales[leaf] = scale
+                if plan.commit[leaf]:
+                    sharding = plan.specs[leaf]
+                    replicated = all(
+                        ax is None for ax in tuple(sharding.spec))
+                    imap = None if replicated else \
+                        sharding.devices_indices_map(plan.shapes[leaf])
+                    for d in piece.devices:
+                        put_keys.append((leaf, d.id))
+                        put_arrs.append(arr if replicated
+                                        else arr[imap[d]])
+                        put_devs.append(d)
+                continue
+            if not merged:
+                with self._lock:
+                    full = self._host.get(leaf)
+                    if full is None:
+                        full = np.empty(plan.shapes[leaf], arr.dtype)
+                        self._host[leaf] = full
+                        self._scales[leaf] = None
+                full[tuple(index)] = arr             # disjoint per shard
+            if plan.commit[leaf]:
+                for d in piece.devices:              # eager mesh commit
+                    put_keys.append((leaf, d.id))
+                    put_arrs.append(arr)
+                    put_devs.append(d)
+        if put_arrs:
+            bufs = jax.device_put(put_arrs, put_devs)
+            with self._lock:
+                self._bufs.update(zip(put_keys, bufs))
+        with self._lock:
+            self._arrived += 1
+            last = self._arrived >= plan.n_shards
+        if last:
+            # the unit is complete: issue the (async) default-device
+            # placement of the merged full leaves here, so the weight
+            # unit's A is a metadata stitch + transfer wait instead of
+            # a critical-path host-to-device copy of the whole unit
+            # (transformed leaves excluded — the apply path recasts
+            # them and would discard a raw-dtype buffer)
+            names = [leaf for leaf, sc in self._scales.items()
+                     if sc is None and not plan.transformed[leaf]]
+            bufs = jax.device_put([self._host[n] for n in names])
+            self._compute = dict(zip(names, bufs))
+        return last
+
+    @property
+    def complete(self) -> bool:
+        """All shards merged AND committed (including the compute
+        prefetch): True only after some add_shard returned last=True."""
+        with self._lock:
+            return self._arrived >= self.plan.n_shards and \
+                self._compute is not None
+
+    def host_leaves(self) -> Dict[str, Tuple[np.ndarray,
+                                             Optional[np.ndarray]]]:
+        """The merged {leaf: (array, scale)} dict — identical in form
+        (and bytes) to ``WeightStore.deserialize`` of the whole unit."""
+        with self._lock:
+            return {k: (v, self._scales[k]) for k, v in self._host.items()}
+
+    @property
+    def compute_bufs(self) -> Dict[str, jax.Array]:
+        """Default-device placements of the merged full leaves (issued
+        by the last shard's commit; excludes transformed leaves —
+        dequant/cast is the weight-application compute phase)."""
+        return self._compute or {}
+
+    def global_array(self, leaf: str) -> jax.Array:
+        """Stitch the eagerly-committed per-device buffers into the
+        leaf's global sharded array (metadata only — no transfer)."""
+        sharding = self.plan.specs[leaf]
+        shape = self.plan.shapes[leaf]
+        bufs = [self._bufs[(leaf, d.id)]
+                for d in sharding.devices_indices_map(shape)]
+        return jax.make_array_from_single_device_arrays(
+            shape, sharding, bufs)

@@ -41,9 +41,13 @@ PyTree = Any
 
 # Canonical stage names on the blackboard.  The letters match the
 # PipelineTrace rows: L produces CONSTRUCTED, A produces APPLIED, E
-# produces OUTPUT.
+# produces OUTPUT.  Under a mesh the weight units additionally publish
+# SHARDED: the unit's steady-state leaves as mesh-committed
+# NamedSharding arrays (stitched from the shards' eager device_puts),
+# which the engine assembles into the sharded scan-stacked params.
 CONSTRUCTED = "constructed"
 APPLIED = "applied"
+SHARDED = "sharded"
 OUTPUT = "output"
 
 
@@ -126,8 +130,15 @@ class PipelineContext:
     decoupler: Any                       # WeightDecoupler
     scheduler: PriorityAwareScheduler
     state: PipelineState
-    apply_leaves: Callable[[str, PyTree, Any], PyTree]
+    # (unit, abstract, retrieved) -> (compute_tree, mesh_tree_or_None):
+    # compute_tree feeds E on the default device (bit-identical to the
+    # single-device path); mesh_tree is the unit's steady-state sharded
+    # leaves when a mesh is attached (None otherwise)
+    apply_leaves: Callable[[str, PyTree, Any], Any]
     apply_fn: Callable[[str], Callable]
+    # sharded cold start: resolved mesh + rules (None -> seed path)
+    mesh: Any = None
+    rules: Any = None
     # Called with the request's logits as soon as the final unit's E
     # completes them — while that E event is still open, before the
     # pipeline drains/assembles.  This is how a cold *generation*
@@ -168,10 +179,20 @@ class LayerConstructionUnit(PipelineUnit):
         ctx = self.ctx
         for u, k in zip(ctx.units, ctx.keys):
             if ctx.strategy.scheduler:
-                ctx.scheduler.adjust_priority(u)          # Algorithm 1 at L_i
+                # Algorithm 1 at L_i — for the layer the pipeline needs
+                # NEXT (lowest un-applied), not the one being built:
+                # prioritizing u_i itself would march criticality ahead
+                # of the weight unit and park exactly the streams it is
+                # waiting on (pathological with per-shard streams)
+                applied = ctx.state.peek(APPLIED)
+                needed = next((x for x in ctx.units if x not in applied),
+                              u)
+                ctx.scheduler.adjust_priority(needed)
             with ctx.trace.record("L", u):
                 cu = miniloader.construct_unit(ctx.model, u, k,
-                                               mini=ctx.strategy.mini)
+                                               mini=ctx.strategy.mini,
+                                               mesh=ctx.mesh,
+                                               rules=ctx.rules)
             ctx.state.publish(CONSTRUCTED, u, cu)
 
 
@@ -193,10 +214,13 @@ class DecoupledWeightUnit(PipelineUnit):
             u = self._next_ready(pending)
             cu = ctx.state.get(CONSTRUCTED, u)
             with ctx.trace.record("A", u):
-                params = ctx.apply_leaves(u, cu.abstract, dec.ready[u])
-            dec.checkin(u)      # application done: drop the cache pin
+                params, mesh_tree = ctx.apply_leaves(u, cu.abstract,
+                                                     dec.ready[u])
+            dec.checkin(u)      # application done: drop the cache pins
             ctx.trace.record_memory(u, cu.mem_bytes, cu.t_construct_end,
                                     time.monotonic())
+            if mesh_tree is not None:
+                ctx.state.publish(SHARDED, u, mesh_tree)
             ctx.state.publish(APPLIED, u, params)
             pending.discard(u)
 
@@ -237,11 +261,13 @@ class FusedWeightUnit(PipelineUnit):
             t0 = time.monotonic()
             leaves = ctx.decoupler.fetch_sync(u)
             t_io = time.monotonic()
-            params = ctx.apply_leaves(u, cu.abstract, leaves)
+            params, mesh_tree = ctx.apply_leaves(u, cu.abstract, leaves)
             t1 = time.monotonic()
             ctx.trace.add_event("R", u, t0, t_io)
             ctx.trace.add_event("A", u, t_io, t1)
             ctx.trace.record_memory(u, cu.mem_bytes, cu.t_construct_end, t1)
+            if mesh_tree is not None:
+                ctx.state.publish(SHARDED, u, mesh_tree)
             ctx.state.publish(APPLIED, u, params)
 
 

@@ -219,12 +219,28 @@ def _leaf_logical(path: Tuple[Any, ...], shape: Tuple[int, ...]
 
 def param_specs(abstract_params: PyTree, mesh: Mesh,
                 rules: ShardingRules) -> PyTree:
-    """NamedSharding tree matching the (abstract) parameter tree."""
+    """NamedSharding tree matching the (abstract) parameter tree.
+
+    Works on the full (scan-stacked) tree *and* on a single streaming
+    unit's tree: classification keys off the trailing leaf-path
+    components, which are identical in both views."""
     def f(path, leaf):
         logical = _leaf_logical(path, leaf.shape)
         spec = _guarded_spec(mesh, rules, leaf.shape, logical)
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map_with_path(f, abstract_params)
+
+
+def leaf_specs(abstract_unit: PyTree, mesh: Mesh, rules: ShardingRules
+               ) -> Dict[str, NamedSharding]:
+    """Per-leaf NamedShardings of one streaming unit, keyed by the
+    WeightStore's flat leaf path ("attn/wq", "norm1/scale", ...) — the
+    resolution the shard-granular cold-start pipeline plans its
+    byte-range retrieval streams from."""
+    from repro.store.store import leaf_path_name
+    flat = jax.tree_util.tree_flatten_with_path(
+        param_specs(abstract_unit, mesh, rules))[0]
+    return {leaf_path_name(path): sharding for path, sharding in flat}
 
 
 def cache_specs(abstract_cache: PyTree, mesh: Mesh,

@@ -209,6 +209,8 @@ def _memory_record(compiled) -> Dict[str, Any]:
 
 def _cost_record(compiled) -> Dict[str, Any]:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):          # jax 0.4.x: one dict/program
+        ca = ca[0] if ca else {}
     coll = hlo_analysis.collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

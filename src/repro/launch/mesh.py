@@ -11,21 +11,44 @@ inside the ICI domain.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+
+
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    # jax 0.4.x `make_mesh` has no ``axis_types`` parameter (it appeared
+    # in 0.5+, where Auto is also the default) — call it portably.
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     """Whatever this process actually has (tests / smoke runs)."""
     n = len(jax.devices())
     mp = min(model_parallel, n)
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_serving_mesh(mesh_shape: Sequence[int]) -> jax.sharding.Mesh:
+    """A ("data", "model") mesh of exactly ``prod(mesh_shape)`` local
+    devices — the serving stack's knob for sharded cold starts.  A 1-d
+    shape means pure model parallelism: ``(4,)`` == ``(1, 4)``."""
+    shape = tuple(int(s) for s in mesh_shape)
+    if len(shape) == 1:
+        shape = (1,) + shape
+    if len(shape) != 2:
+        raise ValueError(f"mesh_shape must be 1- or 2-d, got {mesh_shape}")
+    need = shape[0] * shape[1]
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"mesh_shape {shape} needs {need} devices, have {have} "
+            f"(CPU simulation: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need})")
+    return _make_mesh(shape, ("data", "model"))

@@ -11,11 +11,35 @@ per-strategy latency / utilization statistics.
 *generation* requests: each invocation decodes n-new tokens through the
 instances' continuous-batching DecodeSchedulers, and the report adds
 TTFT / TPOT / tokens-per-second.
+
+``--mesh 4`` streams weights shard-granularly onto a 4-way model-
+parallel device mesh (one byte-range retrieval stream per device, each
+on its own simulated store channel) and serves warm requests from the
+mesh-sharded params.  On CPU the devices are simulated — the flag below
+is set automatically when unset.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import tempfile
+
+# Must precede the jax import: jax locks the device count on first init.
+# A CPU run of `--mesh N` needs N simulated host devices.
+if "XLA_FLAGS" not in os.environ:
+    _n = 0
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a == "--mesh":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--mesh="):
+                _n = int(_a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            _n = 4
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={_n}"
 
 import jax
 import jax.numpy as jnp
@@ -87,13 +111,22 @@ def main(argv=None):
                     help="enable the node-local shared WeightCache with "
                          "this byte budget (0 = unbounded; default: no "
                          "cache)")
-    ap.add_argument("--bandwidth-mbps", type=float, default=400.0)
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="model-parallel mesh width: stream weights "
+                         "shard-granularly onto (1, N) devices and "
+                         "serve warm requests sharded (1 = seed path)")
+    ap.add_argument("--bandwidth-mbps", type=float, default=400.0,
+                    help="simulated store bandwidth per channel; with "
+                         "--mesh N the store exposes N channels (one "
+                         "independent link per device)")
     ap.add_argument("--store", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     store_dir = args.store or tempfile.mkdtemp(prefix="cicada-store-")
-    store = WeightStore(store_dir, BandwidthModel(args.bandwidth_mbps, 0.2))
+    store = WeightStore(store_dir,
+                        BandwidthModel(args.bandwidth_mbps, 0.2,
+                                       channels=max(1, args.mesh)))
 
     builders = {}
     for name in args.models:
@@ -123,7 +156,9 @@ def main(argv=None):
                                   max_instances=args.max_instances,
                                   cache_budget_bytes=cache_budget,
                                   gen_slots=args.gen_slots,
-                                  gen_cache_len=args.gen_cache_len)
+                                  gen_cache_len=args.gen_cache_len,
+                                  mesh_shape=(1, args.mesh)
+                                  if args.mesh > 1 else None)
 
     def make_batch(name):
         return example_batch(get_config(name, smoke=args.smoke))

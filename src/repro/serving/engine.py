@@ -50,7 +50,8 @@ class ServerlessPlatform:
                  policy: Optional[EvictionPolicy] = None,
                  cache_budget_bytes: Optional[int] = None,
                  cache: Optional[WeightCache] = None,
-                 gen_slots: int = 8, gen_cache_len: int = 256):
+                 gen_slots: int = 8, gen_cache_len: int = 256,
+                 mesh_shape=None, rules=None):
         """builders: model_name -> () -> (model, example_batch).
 
         cache_budget_bytes: enable ONE node-local WeightCache shared by
@@ -63,6 +64,13 @@ class ServerlessPlatform:
         gen_slots / gen_cache_len: per-instance continuous-batching
         capacity — up to gen_slots concurrent generation requests share
         one slotted KV cache of gen_cache_len positions per slot.
+
+        mesh_shape / rules: shard-granular cold starts — every
+        instance's pipeline streams weights onto a ``(data, model)``
+        device mesh of this shape (one byte-range retrieval stream per
+        device; with the shared cache, keyed per shard) and serves warm
+        requests from the mesh-sharded params.  ``4`` == ``(1, 4)``;
+        rules defaults to the serving TP rules.
         """
         self.store = store
         self.strategy = strategy
@@ -71,6 +79,7 @@ class ServerlessPlatform:
         if cache is None and cache_budget_bytes is not None:
             cache = WeightCache(cache_budget_bytes)
         self.cache = cache
+        self.mesh_shape = mesh_shape
         self.pools: Dict[str, InstancePool] = {
             name: InstancePool(name, builder, store, strategy=strategy,
                                policy=self.policy,
@@ -79,7 +88,8 @@ class ServerlessPlatform:
                                chunk_bytes=chunk_bytes,
                                cache=self.cache,
                                gen_slots=gen_slots,
-                               gen_cache_len=gen_cache_len)
+                               gen_cache_len=gen_cache_len,
+                               mesh_shape=mesh_shape, rules=rules)
             for name, builder in builders.items()}
         self.last_router_stats = None      # RouterStats of the last replay
 

@@ -60,18 +60,33 @@ class FunctionInstance:
                  chunk_bytes: int = 1 << 20, warm: bool = True,
                  example_batch: Optional[Dict[str, jax.Array]] = None,
                  cache: Optional[WeightCache] = None,
-                 gen_slots: int = 8, gen_cache_len: int = 256):
+                 gen_slots: int = 8, gen_cache_len: int = 256,
+                 mesh_shape=None, rules=None):
         """gen_slots / gen_cache_len: capacity of this container's
         continuous-batching DecodeScheduler — concurrent generation
         requests up to gen_slots share one slotted KV cache of
-        gen_cache_len positions per slot."""
+        gen_cache_len positions per slot.
+
+        mesh_shape / rules: shard-granular cold starts — weights stream
+        onto a ``(data, model)`` device mesh of this shape (e.g.
+        ``(1, 4)`` or just ``4`` for 4-way model parallelism), one
+        retrieval stream per device, and the instance serves warm
+        requests from the mesh-sharded params.  rules defaults to
+        ``serve_rules()``."""
         self.model = model
         self.model_name = model_name
+        mesh = None
+        if mesh_shape is not None:
+            from repro.launch.mesh import make_serving_mesh
+            if isinstance(mesh_shape, int):
+                mesh_shape = (1, mesh_shape)
+            mesh = make_serving_mesh(mesh_shape)
+        self.mesh = mesh
         self.engine = ColdStartEngine(model, model_name, store,
                                       strategy=strategy,
                                       io_workers=io_workers,
                                       chunk_bytes=chunk_bytes,
-                                      cache=cache)
+                                      cache=cache, mesh=mesh, rules=rules)
         self.params: Optional[PyTree] = None
         self.last_load: Optional[LoadResult] = None
         self.gen_slots = int(gen_slots)
@@ -192,21 +207,26 @@ class InstancePool:
                  chunk_bytes: int = 1 << 20,
                  instance_factory: Optional[Callable[[], Any]] = None,
                  cache: Optional[WeightCache] = None,
-                 gen_slots: int = 8, gen_cache_len: int = 256):
+                 gen_slots: int = 8, gen_cache_len: int = 256,
+                 mesh_shape=None, rules=None):
         """builder: () -> (model, example_batch).  ``instance_factory``
         overrides container provisioning (tests / future remote pools);
         the default builds a warmed FunctionInstance.  ``cache``: one
         node-local WeightCache shared by every instance of this pool
         (and, via the platform, across pools) — concurrent scale-out
-        cold starts then single-flight each unit's store read.
+        cold starts then single-flight each (unit, shard) store read.
         ``gen_slots``/``gen_cache_len``: per-instance DecodeScheduler
-        capacity (concurrent generation residency / KV positions)."""
+        capacity (concurrent generation residency / KV positions).
+        ``mesh_shape``/``rules``: shard-granular cold starts (see
+        FunctionInstance)."""
         self.model_name = model_name
         self.policy = policy if policy is not None else NeverEvict()
         self.max_instances = max(1, int(max_instances))
         self.cache = cache
         self.gen_slots = int(gen_slots)
         self.gen_cache_len = int(gen_cache_len)
+        self.mesh_shape = mesh_shape
+        self.rules = rules
         self._builder = builder
         self._store = store
         self._strategy = strategy
@@ -236,7 +256,9 @@ class InstancePool:
                                 example_batch=example,
                                 cache=self.cache,
                                 gen_slots=self.gen_slots,
-                                gen_cache_len=self.gen_cache_len)
+                                gen_cache_len=self.gen_cache_len,
+                                mesh_shape=self.mesh_shape,
+                                rules=self.rules)
 
     # ------------------------------------------------------------ lifecycle
     def acquire(self, *, timeout: Optional[float] = None,
@@ -286,20 +308,7 @@ class InstancePool:
                     self._cv.wait(remaining)
                 finally:
                     self._excl_waiters -= 1
-        # Provision outside the lock: builder() + warmup compilation are
-        # expensive and must not serialize the pool.
-        try:
-            inst = self._factory()
-        except BaseException:
-            with self._cv:
-                self._creating -= 1
-                self._cv.notify_all()
-            raise
-        with self._cv:
-            self._creating -= 1
-            self._instances.append(inst)
-            self._busy.append(inst)
-        return inst
+        return self._provision()
 
     # --------------------------------------------------- shared generation
     def _gen_candidate(self):
@@ -386,7 +395,15 @@ class InstancePool:
                     remaining = window if remaining is None \
                         else min(remaining, window)
                 self._cv.wait(remaining)
-        # Provision outside the lock (same rationale as acquire()).
+        return self._provision(gen=True), False
+
+    def _provision(self, *, gen: bool = False):
+        """Scale-out: build a fresh busy instance.  The caller already
+        incremented ``_creating`` under the lock; the factory (builder +
+        warmup compilation) runs *outside* it so provisioning never
+        serializes the pool.  ``gen=True`` registers the instance as
+        cold-held by one generation request (closed to joiners until
+        :meth:`mark_live`)."""
         try:
             inst = self._factory()
         except BaseException:
@@ -398,9 +415,10 @@ class InstancePool:
             self._creating -= 1
             self._instances.append(inst)
             self._busy.append(inst)
-            self._gen_count[id(inst)] = 1
-            self._gen_cold.add(id(inst))
-        return inst, False
+            if gen:
+                self._gen_count[id(inst)] = 1
+                self._gen_cold.add(id(inst))
+        return inst
 
     def mark_live(self, inst):
         """The cold load on ``inst`` finished: open it to concurrent

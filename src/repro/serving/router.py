@@ -125,28 +125,72 @@ class Router:
                 _, _, req, fut = heapq.heappop(self._heap)
             self._dispatch(req, fut)
 
+    def _requeue(self, req: Request, fut: "Future[Response]"):
+        """Pool saturated: requeue at the tail of the request's class so
+        this worker can serve other (higher-priority) work."""
+        with self._cv:
+            heapq.heappush(self._heap,
+                           (int(req.cls), next(self._seq), req, fut))
+            self._cv.notify()
+
     def _dispatch(self, req: Request, fut: "Future[Response]"):
         if req.gen is not None:
             return self._dispatch_gen(req, fut)
         pool = self.pools[req.model]
+        self._serve(req, fut, pool,
+                    acquire=lambda: pool.acquire(
+                        timeout=self.acquire_timeout_s,
+                        logical_now=req.t_logical),
+                    release=pool.release,
+                    service=lambda inst: inst.invoke(req.batch))
+
+    def _dispatch_gen(self, req: Request, fut: "Future[Response]"):
+        """Generation dispatch: a *shared* pool hold — concurrent
+        requests join one instance's continuous-batching decode
+        scheduler instead of serializing behind exclusive acquire.  A
+        cold instance is held exclusively only for the pipeline load
+        (its first token is produced in-pipeline); mark_live then opens
+        it to joiners mid-request."""
+        pool = self.pools[req.model]
+
+        def service(inst, joinable):
+            on_live = None if joinable else \
+                (lambda i=inst: pool.mark_live(i))
+            return inst.generate(req.gen, on_live=on_live)
+
+        def extra(result, t_arr):
+            return dict(tokens=np.asarray(result.tokens, np.int32),
+                        ttft_s=result.t_first - t_arr,
+                        tpot_s=result.tpot_s)
+
+        self._serve(req, fut, pool,
+                    acquire=lambda: pool.acquire_gen(
+                        timeout=self.acquire_timeout_s,
+                        logical_now=req.t_logical),
+                    release=pool.release_gen,
+                    service=service, extra=extra)
+
+    def _serve(self, req: Request, fut: "Future[Response]", pool, *,
+               acquire, release, service, extra=None):
+        """The dispatch skeleton shared by the one-shot and generation
+        paths: acquire with requeue-on-timeout, claim the future, track
+        in-flight, serve, release, resolve.  ``acquire`` may return an
+        instance or an ``(instance, ...)`` tuple whose tail is passed
+        through to ``service``; ``extra(result, t_arr)`` contributes
+        path-specific Response fields."""
         inst = None
         try:
             try:
-                inst = pool.acquire(timeout=self.acquire_timeout_s,
-                                    logical_now=req.t_logical)
+                got = acquire()
             except TimeoutError:
-                # pool saturated: requeue at the tail of its class so
-                # this worker can serve other (higher-priority) work
-                with self._cv:
-                    heapq.heappush(self._heap,
-                                   (int(req.cls), next(self._seq), req, fut))
-                    self._cv.notify()
+                self._requeue(req, fut)
                 return
+            inst, *rest = got if isinstance(got, tuple) else (got,)
             # claim the future before doing work: a request cancelled
             # while queued is dropped here instead of being served into
             # a dead future (whose set_result would kill this worker)
             if not fut.set_running_or_notify_cancel():
-                pool.release(inst, logical_now=req.t_logical)
+                release(inst, logical_now=req.t_logical)
                 return
             # service starts here: t_arrival/latency_s measure the
             # invocation itself (seed semantics) — router queueing,
@@ -157,13 +201,12 @@ class Router:
                 self.stats.max_in_flight = max(self.stats.max_in_flight,
                                                self._in_flight)
             try:
-                logits, info = inst.invoke(req.batch)
+                result, info = service(inst, *rest)
             finally:
                 with self._cv:
                     self._in_flight -= 1
             t_done = time.monotonic()
-            pool.release(inst, logical_now=req.t_logical,
-                         cold=info["cold"])
+            release(inst, logical_now=req.t_logical, cold=info["cold"])
             inst = None
             with self._cv:
                 self.stats.completed += 1
@@ -172,67 +215,11 @@ class Router:
                 t_arrival=t_arr, t_done=t_done,
                 load_s=info["load_s"], infer_s=info["infer_s"],
                 utilization=info["utilization"],
-                queue_s=t_arr - req.t_submit, cls=req.cls))
+                queue_s=t_arr - req.t_submit, cls=req.cls,
+                **(extra(result, t_arr) if extra is not None else {})))
         except BaseException as e:
             if inst is not None:
-                pool.release(inst, logical_now=req.t_logical)
-            _resolve(fut, exc=e)
-
-    def _dispatch_gen(self, req: Request, fut: "Future[Response]"):
-        """Generation dispatch: a *shared* pool hold — concurrent
-        requests join one instance's continuous-batching decode
-        scheduler instead of serializing behind exclusive acquire.  A
-        cold instance is held exclusively only for the pipeline load
-        (its first token is produced in-pipeline); mark_live then opens
-        it to joiners mid-request."""
-        pool = self.pools[req.model]
-        inst = None
-        holding = False
-        try:
-            try:
-                inst, joinable = pool.acquire_gen(
-                    timeout=self.acquire_timeout_s,
-                    logical_now=req.t_logical)
-                holding = True
-            except TimeoutError:
-                with self._cv:
-                    heapq.heappush(self._heap,
-                                   (int(req.cls), next(self._seq), req, fut))
-                    self._cv.notify()
-                return
-            if not fut.set_running_or_notify_cancel():
-                pool.release_gen(inst, logical_now=req.t_logical)
-                return                    # cancelled while queued
-            on_live = None if joinable else \
-                (lambda i=inst: pool.mark_live(i))
-            t_arr = time.monotonic()
-            with self._cv:
-                self._in_flight += 1
-                self.stats.max_in_flight = max(self.stats.max_in_flight,
-                                               self._in_flight)
-            try:
-                result, info = inst.generate(req.gen, on_live=on_live)
-            finally:
-                with self._cv:
-                    self._in_flight -= 1
-            t_done = time.monotonic()
-            pool.release_gen(inst, logical_now=req.t_logical,
-                             cold=info["cold"])
-            holding = False
-            with self._cv:
-                self.stats.completed += 1
-            _resolve(fut, result=Response(
-                req_id=req.req_id, model=req.model, cold=info["cold"],
-                t_arrival=t_arr, t_done=t_done,
-                load_s=info["load_s"], infer_s=info["infer_s"],
-                utilization=info["utilization"],
-                queue_s=t_arr - req.t_submit, cls=req.cls,
-                tokens=np.asarray(result.tokens, np.int32),
-                ttft_s=result.t_first - t_arr,
-                tpot_s=result.tpot_s))
-        except BaseException as e:
-            if holding:
-                pool.release_gen(inst, logical_now=req.t_logical)
+                release(inst, logical_now=req.t_logical)
             _resolve(fut, exc=e)
 
     def cache_stats(self):

@@ -7,8 +7,12 @@ cold-start cost paid N times on one node.  Fast serverless scaling
 hinges on reusing already-resident weights across instances (λScale,
 HydraServe); this cache is that reuse point:
 
-  * **keyed by (model, unit)** — the store's retrieval granularity, so
-    a partially-loaded model already serves hits to a concurrent load;
+  * **keyed by (model, unit, shard)** — the store's retrieval
+    granularity: under shard-granular cold starts every mesh device's
+    stream caches independently, so a scale-out cold start onto the
+    same mesh is zero-read *per shard* and a partially-loaded model
+    already serves hits to a concurrent load (the seed's unit-granular
+    path is the degenerate ``shard=0`` case);
   * **single-flight** — the first loader of a unit reads from the
     store, every concurrent loader blocks on the shared condition
     variable and receives the leader's leaves: one physical read per
@@ -88,7 +92,8 @@ class WeightCache:
         # insert — never what a caller wants from "enable the cache")
         self.budget_bytes = budget_bytes or None
         self._cv = threading.Condition()
-        self._entries: "OrderedDict[Tuple[str, str], _Entry]" = OrderedDict()
+        self._entries: "OrderedDict[Tuple[str, str, Hashable], _Entry]" = \
+            OrderedDict()
         self._bytes = 0
         self._inflight: Dict[str, int] = {}      # model -> active loads
         self._hits = 0
@@ -98,8 +103,9 @@ class WeightCache:
         self._evictions = 0
 
     # --------------------------------------------------------- load protocol
-    def begin(self, model: str, unit: str) -> Tuple[str, Any]:
-        """Enter the single-flight protocol for one unit.
+    def begin(self, model: str, unit: str, shard: Hashable = 0
+              ) -> Tuple[str, Any]:
+        """Enter the single-flight protocol for one (unit, shard).
 
         Returns ``(HIT, leaves)`` — a reference is taken; call
         :meth:`release` after the weight-application phase — or
@@ -109,7 +115,7 @@ class WeightCache:
         callers of a loading unit block here and are served the
         leader's result (or promoted to leader if it aborts).
         """
-        key = (model, unit)
+        key = (model, unit, shard)
         waited = False
         with self._cv:
             while True:
@@ -130,10 +136,11 @@ class WeightCache:
                     self._waits += 1
                 return HIT, e.leaves
 
-    def complete(self, model: str, unit: str, leaves: Any, nbytes: int):
+    def complete(self, model: str, unit: str, leaves: Any, nbytes: int,
+                 shard: Hashable = 0):
         """Publish the leader's read; wakes all waiters.  The leader
         keeps one reference (release after application)."""
-        key = (model, unit)
+        key = (model, unit, shard)
         with self._cv:
             e = self._entries.get(key)
             if e is None or not e.loading:
@@ -148,19 +155,19 @@ class WeightCache:
             self._evict_locked()
             self._cv.notify_all()
 
-    def abort(self, model: str, unit: str):
+    def abort(self, model: str, unit: str, shard: Hashable = 0):
         """Leader failed: drop the placeholder so a waiter retries as
         the new leader."""
         with self._cv:
-            e = self._entries.get((model, unit))
+            e = self._entries.get((model, unit, shard))
             if e is not None and e.loading:
-                del self._entries[(model, unit)]
+                del self._entries[(model, unit, shard)]
             self._cv.notify_all()
 
-    def release(self, model: str, unit: str):
+    def release(self, model: str, unit: str, shard: Hashable = 0):
         """Drop one reference taken by begin()/complete()."""
         with self._cv:
-            e = self._entries.get((model, unit))
+            e = self._entries.get((model, unit, shard))
             if e is None or e.loading:
                 return
             e.refs = max(0, e.refs - 1)
@@ -202,15 +209,22 @@ class WeightCache:
             self._evictions += 1
 
     # --------------------------------------------------------------- queries
-    def __contains__(self, key: Tuple[str, str]) -> bool:
+    def __contains__(self, key: Tuple) -> bool:
+        # 2-tuples address the default (unit-granular) shard 0
+        if len(key) == 2:
+            key = (key[0], key[1], 0)
         with self._cv:
             e = self._entries.get(key)
             return e is not None and not e.loading
 
     def cached_units(self, model: str) -> List[str]:
+        """Unit names with at least one cached shard."""
         with self._cv:
-            return [u for (m, u), e in self._entries.items()
-                    if m == model and not e.loading]
+            seen = []
+            for (m, u, _s), e in self._entries.items():
+                if m == model and not e.loading and u not in seen:
+                    seen.append(u)
+            return seen
 
     def stats(self) -> CacheStats:
         with self._cv:

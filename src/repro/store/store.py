@@ -54,30 +54,36 @@ class BandwidthModel:
     paper's Fig. 5 regime — because this container's page cache would
     otherwise hide the I/O phase entirely.
 
-    Bandwidth is one token bucket across ALL streams: concurrent
-    retrievals split the device, they do not multiply it (otherwise the
+    Bandwidth is one token bucket *per channel*: all streams on one
+    channel split it, they do not multiply it (otherwise the
     WeightDecoupler's parallel prefetch would get free bandwidth and
     the comparison against serial PISeL retrieval would be unfair).
+    ``channels`` models independent storage links — the λScale /
+    HydraServe regime where every mesh device (or host) brings its own
+    NIC/DMA path, which is exactly what shard-granular retrieval
+    exploits.  The default (1) is the seed's single shared device.
     """
-    bandwidth_mbps: float = 0.0          # 0 -> unthrottled
+    bandwidth_mbps: float = 0.0          # 0 -> unthrottled (per channel)
     latency_ms: float = 0.0
+    channels: int = 1
 
     def __post_init__(self):
         self._lock = threading.Lock()
-        self._next_free = 0.0
+        self._next_free = [0.0] * max(1, int(self.channels))
 
     def on_open(self):
         if self.latency_ms > 0:
             time.sleep(self.latency_ms / 1e3)
 
-    def on_chunk(self, nbytes: int):
+    def on_chunk(self, nbytes: int, channel: int = 0):
         if self.bandwidth_mbps <= 0:
             return
         dur = nbytes / (self.bandwidth_mbps * 1e6)
+        ch = channel % len(self._next_free)
         with self._lock:
             now = time.monotonic()
-            start = max(now, self._next_free)
-            self._next_free = start + dur
+            start = max(now, self._next_free[ch])
+            self._next_free[ch] = start + dur
         delay = (start + dur) - time.monotonic()
         if delay > 0:
             time.sleep(delay)
@@ -87,16 +93,20 @@ class BandwidthModel:
 # tree <-> flat leaves
 # ---------------------------------------------------------------------------
 
+def leaf_path_name(path) -> str:
+    """Canonical flat name of a tree_flatten_with_path key path — THE
+    leaf identity used by the store layout, shard plans, cache keys and
+    spec lookups.  Every consumer must share this one definition."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
 def flatten_unit(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
     """Stable (path, leaf) list for a unit's param tree."""
     import jax
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = []
-    for path, leaf in flat:
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
-        out.append((name, np.asarray(leaf)))
-    return out
+    return [(leaf_path_name(path), np.asarray(leaf))
+            for path, leaf in flat]
 
 
 def unflatten_unit(abstract: PyTree, leaves: Dict[str, np.ndarray]) -> PyTree:
@@ -105,12 +115,56 @@ def unflatten_unit(abstract: PyTree, leaves: Dict[str, np.ndarray]) -> PyTree:
     flat, treedef = jax.tree_util.tree_flatten_with_path(abstract)
     vals = []
     for path, ab in flat:
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
+        name = leaf_path_name(path)
         v = leaves[name]
         assert tuple(v.shape) == tuple(ab.shape), (name, v.shape, ab.shape)
         vals.append(v)
     return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def slice_byte_runs(shape: Tuple[int, ...], itemsize: int,
+                    index: Tuple[Any, ...]) -> List[Tuple[int, int]]:
+    """Contiguous (offset, nbytes) runs of ``arr[index]`` within the
+    row-major payload of an array of ``shape`` — the byte-range plan a
+    shard stream reads instead of the whole leaf.
+
+    ``index`` is a per-dim sequence of slices (step 1), as produced by
+    ``NamedSharding.devices_indices_map``; runs are maximal: all dims
+    inner to the outermost partial dim are folded into one range.
+    """
+    if not shape:
+        return [(0, itemsize)]
+    norm = []
+    for s, dim in zip(index, shape):
+        start = 0 if s.start is None else int(s.start)
+        stop = dim if s.stop is None else int(s.stop)
+        norm.append((start, stop))
+    # outermost-from-the-right dim whose slice is partial: runs span it
+    # plus every (full) dim inside it
+    k = 0
+    for j in range(len(shape) - 1, -1, -1):
+        if norm[j] != (0, shape[j]):
+            k = j
+            break
+    inner = 1
+    for d in shape[k + 1:]:
+        inner *= d
+    run_elems = (norm[k][1] - norm[k][0]) * inner
+    if run_elems <= 0:
+        return []
+    strides = [0] * len(shape)           # element strides
+    acc = 1
+    for j in range(len(shape) - 1, -1, -1):
+        strides[j] = acc
+        acc *= shape[j]
+    outer = [range(a, b) for (a, b) in norm[:k]]
+    runs: List[Tuple[int, int]] = []
+    import itertools
+    for coords in itertools.product(*outer):
+        off = sum(c * strides[j] for j, c in enumerate(coords))
+        off += norm[k][0] * inner
+        runs.append((off * itemsize, run_elems * itemsize))
+    return runs
 
 
 # ---------------------------------------------------------------------------
@@ -194,14 +248,15 @@ class WeightStore:
     def read_unit(self, model_name: str, unit: str, *,
                   chunk_bytes: int = 4 << 20,
                   gate: Optional[threading.Event] = None,
-                  on_progress: Optional[Callable[[int, int], None]] = None
-                  ) -> bytes:
+                  on_progress: Optional[Callable[[int, int], None]] = None,
+                  channel: int = 0) -> bytes:
         """Chunked raw read of one unit extent file.
 
         gate: cooperative suspension point — the reader blocks between
         chunks while the event is cleared (Priority-Aware Scheduler's
         "block W" / resume).
         on_progress(bytes_done, bytes_total) per chunk.
+        channel: simulated-device link this read draws bandwidth from.
         """
         path = self._unit_path(model_name, unit)
         total = os.path.getsize(path)
@@ -214,11 +269,156 @@ class WeightStore:
                 buf = f.read(min(chunk_bytes, total - len(out)))
                 if not buf:
                     break
-                self.device.on_chunk(len(buf))
+                self.device.on_chunk(len(buf), channel)
                 out.extend(buf)
                 if on_progress is not None:
                     on_progress(len(out), total)
         return bytes(out)
+
+    def _leaf_rec(self, model_name: str, unit: str, leaf: str) -> dict:
+        for rec in self.manifest(model_name)["units"][unit]["extents"]:
+            if rec["path"] == leaf:
+                return rec
+        raise KeyError(f"{model_name}/{unit}/{leaf}")
+
+    def leaf_slice_nbytes(self, model_name: str, unit: str, leaf: str,
+                          index: Optional[Tuple[Any, ...]]) -> int:
+        """Bytes a shard stream will read for ``leaf[index]`` (whole
+        payload when index is None — replicated / quantized leaves)."""
+        rec = self._leaf_rec(model_name, unit, leaf)
+        if index is None or rec.get("quant") == "int8":
+            return rec["nbytes"]
+        return sum(n for _, n in slice_byte_runs(
+            tuple(rec["shape"]), np.dtype(rec["dtype"]).itemsize, index))
+
+    def read_leaf_slice(self, model_name: str, unit: str, leaf: str,
+                        index: Optional[Tuple[Any, ...]], *,
+                        fh=None, chunk_bytes: int = 4 << 20,
+                        gate: Optional[threading.Event] = None,
+                        on_chunk: Optional[Callable[[int], None]] = None,
+                        channel: int = 0, materialize: bool = True,
+                        out: Optional[np.ndarray] = None
+                        ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Byte-range read of one leaf's shard: ``leaf[index]`` only —
+        the unit of retrieval under shard-granular cold starts.
+
+        index None (or an int8-quantized leaf, whose payload interleaves
+        values and scales) reads the whole payload; otherwise only the
+        contiguous runs covering the slice are read.  Returns
+        ``(array, scale_or_None)`` like :meth:`deserialize` does per
+        leaf.  Slice reads skip the whole-payload crc (a shard never
+        materializes the full extent); whole reads still verify.
+
+        ``fh``: optional already-open unit file (one ``on_open`` per
+        shard stream instead of per leaf).
+
+        ``materialize=False`` returns the slice as a page-cache-backed
+        view (the stream still charges the slice's bytes to its
+        simulated channel): the caller's placement lane then performs
+        the single physical gather, instead of every concurrent read
+        thread contending to copy.
+
+        ``out``: destination array for the slice (e.g. a view into the
+        caller's preassembled full leaf) — the read gathers straight
+        into it, eliminating a staging copy.
+        """
+        rec = self._leaf_rec(model_name, unit, leaf)
+        close = False
+        if fh is None:
+            self.device.on_open()
+            fh = open(self._unit_path(model_name, unit), "rb")
+            close = True
+        try:
+            if index is None or rec.get("quant") == "int8":
+                payload = self._read_runs(
+                    fh, [(rec["offset"], rec["nbytes"])], chunk_bytes,
+                    gate, on_chunk, channel)
+                crc = zlib.crc32(payload) & 0xFFFFFFFF
+                if crc != rec["crc32"]:
+                    raise IOError(f"crc mismatch for "
+                                  f"{model_name}/{unit}/{leaf}")
+                return self._decode_leaf(rec, payload)
+            # Strided slice: a single C-level gather through a mapping
+            # of the extent — a per-run Python read loop would cost more
+            # in interpreter/GIL overhead than the byte ranges save
+            # (shard streams run ~device-count-x concurrently).  Only
+            # the slice's bytes are charged to the simulated device.
+            shape = tuple(rec["shape"])
+            dt = np.dtype(rec["dtype"])
+            mm = np.memmap(fh, dtype=np.uint8, mode="r")
+            view = mm[rec["offset"]:rec["offset"] + rec["nbytes"]] \
+                .view(dt).reshape(shape)
+            arr = view[tuple(index)]
+            if out is not None:
+                np.copyto(out, arr)
+                arr = out
+            elif materialize:
+                arr = np.ascontiguousarray(arr)
+            del view, mm
+            done = 0
+            while done < arr.nbytes:          # simulated transfer cost
+                if gate is not None:
+                    gate.wait()
+                n = min(chunk_bytes, arr.nbytes - done)
+                self.device.on_chunk(n, channel)
+                done += n
+                if on_chunk is not None:
+                    on_chunk(n)
+            return arr, None
+        finally:
+            if close:
+                fh.close()
+
+    def open_unit(self, model_name: str, unit: str):
+        """Open a unit extent for a sequence of read_leaf_slice calls
+        (one simulated-device ``on_open`` for the whole shard stream)."""
+        self.device.on_open()
+        return open(self._unit_path(model_name, unit), "rb")
+
+    def _read_runs(self, fh, runs, chunk_bytes, gate, on_chunk,
+                   channel) -> bytes:
+        # simulated cost + progress are charged per ~chunk_bytes of
+        # accumulated payload, not per run: strided shard slices can be
+        # thousands of small runs, and a token-bucket sleep (~50us OS
+        # floor) per run would swamp the modeled transfer time
+        out = bytearray()
+        pending = 0
+
+        def flush():
+            nonlocal pending
+            if pending:
+                self.device.on_chunk(pending, channel)
+                if on_chunk is not None:
+                    on_chunk(pending)
+                pending = 0
+
+        for off, nbytes in runs:
+            fh.seek(off)
+            done = 0
+            while done < nbytes:
+                if gate is not None:
+                    gate.wait()
+                buf = fh.read(min(chunk_bytes, nbytes - done))
+                if not buf:
+                    raise IOError("short read")
+                done += len(buf)
+                out.extend(buf)
+                pending += len(buf)
+                if pending >= chunk_bytes:
+                    flush()
+        flush()
+        return bytes(out)
+
+    @staticmethod
+    def _decode_leaf(rec: dict, payload: bytes
+                     ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        shape = tuple(rec["shape"])
+        if rec.get("quant") == "int8":
+            sn = rec["scale_nbytes"]
+            q = np.frombuffer(payload[:-sn], np.int8)
+            scale = np.frombuffer(payload[-sn:], np.float32)
+            return q.reshape(-1, shape[-1]), scale
+        return np.frombuffer(payload, rec["dtype"]).reshape(shape), None
 
     # ---------------------------------------------------------- deserialize
     def deserialize(self, model_name: str, unit: str, raw: bytes,
@@ -238,15 +438,7 @@ class WeightStore:
                 if crc != rec["crc32"]:
                     raise IOError(
                         f"crc mismatch for {model_name}/{unit}/{rec['path']}")
-            shape = tuple(rec["shape"])
-            if rec.get("quant") == "int8":
-                sn = rec["scale_nbytes"]
-                q = np.frombuffer(payload[:-sn], np.int8)
-                scale = np.frombuffer(payload[-sn:], np.float32)
-                out[rec["path"]] = (q.reshape(-1, shape[-1]), scale)
-            else:
-                arr = np.frombuffer(payload, rec["dtype"]).reshape(shape)
-                out[rec["path"]] = (arr, None)
+            out[rec["path"]] = self._decode_leaf(rec, payload)
         return out
 
     def read_and_deserialize(self, model_name: str, unit: str, **kw

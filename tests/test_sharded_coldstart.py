@@ -1,0 +1,289 @@
+"""Shard-granular cold starts: bit-identity vs the single-device path,
+per-shard cache reuse, non-divisible-axis fallback, and the mesh=1
+degenerate case.
+
+The multi-device tests need a simulated mesh and are skipped unless the
+process has >= 4 devices — CI runs them in the dedicated ``tier1-mesh``
+job under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m pytest tests/test_sharded_coldstart.py
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ColdStartEngine
+from repro.core.shards import plan_unit
+from repro.distributed.sharding import ShardingRules, leaf_specs
+from repro.launch.mesh import make_serving_mesh
+from repro.models import transformer
+from repro.models.api import get_config
+from repro.store.cache import WeightCache
+from repro.store.store import (BandwidthModel, WeightStore, deploy_model,
+                               slice_byte_runs)
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 simulated devices (tier1-mesh CI job: XLA_FLAGS="
+           "--xla_force_host_platform_device_count=4)")
+
+# one per family with distinct sharding behaviour: dense (smollm's
+# n_heads=3 exercises the non-divisible fallback), MoE (expert axis),
+# hybrid (rglru + attn pattern units)
+ARCHS = ["smollm-360m", "mixtral-8x7b", "recurrentgemma-2b"]
+
+
+class CountingStore:
+    """WeightStore wrapper counting physical unit/shard reads."""
+
+    def __new__(cls, *a, **kw):
+        class _Counting(WeightStore):
+            def __init__(self, *args, **kwargs):
+                super().__init__(*args, **kwargs)
+                self.unit_reads = 0
+                self.shard_opens = 0
+                self._read_lock = threading.Lock()
+
+            def read_unit(self, *args, **kwargs):
+                with self._read_lock:
+                    self.unit_reads += 1
+                return super().read_unit(*args, **kwargs)
+
+            def open_unit(self, *args, **kwargs):
+                with self._read_lock:
+                    self.shard_opens += 1
+                return super().open_unit(*args, **kwargs)
+
+            def reset(self):
+                self.unit_reads = 0
+                self.shard_opens = 0
+
+        return _Counting(*a, **kw)
+
+
+def _deploy(tmp_path, arch, name="m"):
+    cfg = get_config(arch, smoke=True)
+    model = transformer.build(cfg)
+    store = CountingStore(str(tmp_path))
+    deploy_model(store, model, name, jax.random.key(7))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 16)),
+        jnp.int32)}
+    return cfg, model, store, batch
+
+
+def _engine(model, store, batch, *, mesh=None, rules=None, cache=None,
+            name="m", strategy="cicada"):
+    eng = ColdStartEngine(model, name, store, strategy=strategy,
+                          mesh=mesh, rules=rules, cache=cache)
+    eng.warmup(batch)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# byte-range planning (no mesh required)
+# ---------------------------------------------------------------------------
+
+def test_slice_byte_runs_match_numpy(rng):
+    for shape in [(8,), (6, 8), (4, 6, 8), (3, 5, 7, 2)]:
+        arr = rng.standard_normal(shape).astype(np.float32)
+        raw = arr.tobytes()
+        for _ in range(8):
+            index = []
+            for dim in shape:
+                if rng.random() < 0.4:
+                    index.append(slice(None))
+                else:
+                    a = int(rng.integers(0, dim))
+                    b = int(rng.integers(a + 1, dim + 1))
+                    index.append(slice(a, b))
+            index = tuple(index)
+            runs = slice_byte_runs(shape, arr.itemsize, index)
+            got = b"".join(raw[o:o + n] for o, n in runs)
+            assert got == np.ascontiguousarray(arr[index]).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# sharded loads on the simulated mesh
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("arch", ARCHS)
+def test_bit_identity_vs_single_device(tmp_path, arch):
+    """The sharded cold start answers the triggering request with logits
+    BIT-identical to the single-device load (the pipeline's compute
+    units never run sharded collectives), the assembled params hold the
+    exact deployed bytes, and warm sharded forwards agree to fp
+    tolerance (sharded matmul reduction order differs)."""
+    cfg, model, store, batch = _deploy(tmp_path, arch)
+    ref = _engine(model, store, batch).load(batch)
+
+    mesh = make_serving_mesh((1, 4))
+    res = _engine(model, store, batch, mesh=mesh).load(batch)
+
+    assert np.asarray(res.logits).tobytes() == \
+        np.asarray(ref.logits).tobytes()
+
+    flat_r = jax.tree_util.tree_flatten_with_path(ref.params)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(res.params)[0]
+    assert len(flat_r) == len(flat_s)
+    sharded_leaves = 0
+    for (p1, l1), (p2, l2) in zip(flat_r, flat_s):
+        assert np.array_equal(np.asarray(l1), np.asarray(l2)), p1
+        if not getattr(l2.sharding, "is_fully_replicated", True):
+            sharded_leaves += 1
+    assert sharded_leaves > 0          # the mesh is actually used
+
+    # every shard stream ran and was traced
+    R = [e for e in res.trace.events if e.stage == "R"]
+    assert {e.meta.get("shard") for e in R if e.meta} == {0, 1, 2, 3}
+
+    warm, _ = model.forward(res.params, batch)
+    ref_warm, _ = model.forward(ref.params, batch)
+    a, b = np.asarray(warm, np.float32), np.asarray(ref_warm, np.float32)
+    if cfg.family.value == "moe":
+        # bf16 sharded matmuls perturb router logits; a flipped top-k
+        # expert legitimately moves single positions — compare the
+        # predicted-token agreement instead of elementwise values
+        agree = (a.argmax(-1) == b.argmax(-1)).mean()
+        assert agree >= 0.9, agree
+    else:
+        assert np.abs(a - b).max() <= 0.05 * max(np.abs(b).max(), 1.0)
+
+
+@needs_mesh
+def test_second_cold_start_hits_cache_per_shard(tmp_path):
+    """With the shared WeightCache, every (unit, shard) stream of a
+    second cold start onto the same mesh is served from the cache:
+    zero additional store opens, logits identical."""
+    cfg, model, store, batch = _deploy(tmp_path, "smollm-360m")
+    mesh = make_serving_mesh((1, 4))
+    cache = WeightCache(None)
+    n_units = len(model.unit_names())
+
+    store.reset()
+    r1 = _engine(model, store, batch, mesh=mesh, cache=cache).load(batch)
+    assert store.shard_opens == n_units * 4      # one open per stream
+    assert store.unit_reads == 0                 # no whole-unit reads
+
+    r2 = _engine(model, store, batch, mesh=mesh, cache=cache).load(batch)
+    assert store.shard_opens == n_units * 4      # zero-read per shard
+    st = cache.stats()
+    assert st.misses == n_units * 4
+    assert st.hits == n_units * 4
+    assert np.asarray(r2.logits).tobytes() == np.asarray(r1.logits).tobytes()
+    assert cache.stats().pinned == 0             # pins checked in
+
+    R = [e for e in r2.trace.events if e.stage == "R"]
+    assert all(e.meta and e.meta.get("cached") for e in R)
+
+
+@needs_mesh
+def test_pool_mesh_knob_and_scale_out(tmp_path):
+    """InstancePool(mesh_shape=...) wires the mesh through provisioning;
+    a scale-out cold start of a second instance is served per-shard
+    from the shared cache without re-reading the store."""
+    from repro.serving.pool import InstancePool
+
+    cfg, model, store, batch = _deploy(tmp_path, "smollm-360m")
+    cache = WeightCache(None)
+    pool = InstancePool("m", lambda: (model, batch), store,
+                        strategy="cicada", max_instances=2, cache=cache,
+                        mesh_shape=4)
+    i1 = pool.acquire()
+    i2 = pool.acquire()
+    store.reset()
+    logits1, info1 = i1.invoke(batch)
+    assert info1["cold"]
+    opens = store.shard_opens
+    assert opens > 0
+    logits2, info2 = i2.invoke(batch)
+    assert info2["cold"]
+    assert store.shard_opens == opens            # all shards cache-served
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits2))
+    pool.release(i1, logical_now=0.0, cold=True)
+    pool.release(i2, logical_now=0.0, cold=True)
+
+
+@needs_mesh
+def test_non_divisible_axis_falls_back_to_replication(tmp_path):
+    """Axes that do not divide their dimension resolve to replication
+    (never a crash, never a wrong shard): smollm's n_heads=3 on a
+    4-way mesh replicates the attention projections while the FFN
+    (d_ff % 4 == 0) stays sharded — and under rules whose every axis
+    is non-divisible, the whole unit replicates and the load still
+    produces the deployed bytes."""
+    cfg, model, store, batch = _deploy(tmp_path, "smollm-360m")
+    mesh = make_serving_mesh((1, 4))
+    specs = leaf_specs(model.abstract_unit("block_000"), mesh,
+                       _serve_rules())
+    assert tuple(specs["attn/wq"].spec) == ()            # 3 heads % 4
+    assert any(ax is not None for ax in tuple(specs["mlp/wg"].spec))
+
+    # a config whose every sharded dim is indivisible by 4: the whole
+    # plan replicates, and the load still produces the deployed bytes
+    import dataclasses
+    odd_cfg = dataclasses.replace(cfg, name="odd", d_model=54, n_heads=3,
+                                  n_kv_heads=1, d_ff=150, vocab_size=510)
+    odd_model = transformer.build(odd_cfg)
+    deploy_model(store, odd_model, "odd", jax.random.key(3))
+    plan = plan_unit(store, "odd", "block_000",
+                     odd_model.abstract_unit("block_000"), mesh,
+                     _serve_rules())
+    assert all(all(ax is None for ax in tuple(s.spec))
+               for s in plan.specs.values())
+    obatch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, 510, (1, 16)), jnp.int32)}
+    ref = _engine(odd_model, store, obatch, name="odd").load(obatch)
+    res = _engine(odd_model, store, obatch, mesh=mesh,
+                  name="odd").load(obatch)
+    assert np.asarray(res.logits).tobytes() == \
+        np.asarray(ref.logits).tobytes()
+
+
+def _serve_rules():
+    from repro.distributed.sharding import serve_rules
+    return serve_rules()
+
+
+def test_mesh_of_one_degenerates_to_seed_path(tmp_path):
+    """mesh=(1,1) is exactly the seed pipeline: unit-granular whole
+    reads, no shard streams, identical logits and unsharded params."""
+    cfg, model, store, batch = _deploy(tmp_path, "smollm-360m")
+    ref = _engine(model, store, batch).load(batch)
+    mesh = make_serving_mesh((1, 1))
+    eng = _engine(model, store, batch, mesh=mesh)
+    assert eng.mesh is None                      # degenerate normalization
+    store.reset()
+    res = eng.load(batch)
+    assert store.unit_reads == len(model.unit_names())
+    assert store.shard_opens == 0
+    assert np.asarray(res.logits).tobytes() == \
+        np.asarray(ref.logits).tobytes()
+    R = [e for e in res.trace.events if e.stage == "R"]
+    assert all(not (e.meta and "shard" in e.meta) for e in R)
+
+
+@needs_mesh
+def test_fused_strategy_places_params_on_mesh(tmp_path):
+    """Non-decoupled strategies (PISeL/mini) keep unit-granular fused
+    retrieval but still assemble mesh-sharded steady-state params."""
+    cfg, model, store, batch = _deploy(tmp_path, "mixtral-8x7b")
+    mesh = make_serving_mesh((1, 4))
+    ref = _engine(model, store, batch, strategy="mini").load(batch)
+    store.reset()
+    res = _engine(model, store, batch, mesh=mesh,
+                  strategy="mini").load(batch)
+    assert store.unit_reads == len(model.unit_names())   # fused reads
+    assert store.shard_opens == 0
+    assert np.asarray(res.logits).tobytes() == \
+        np.asarray(ref.logits).tobytes()
+    anysharded = any(
+        not getattr(l.sharding, "is_fully_replicated", True)
+        for l in jax.tree.leaves(res.params))
+    assert anysharded
