@@ -1,10 +1,21 @@
-"""Kernel micro-benchmarks: XLA-fallback wall time on CPU (structural —
-the Pallas kernels target TPU; interpret mode is a correctness harness,
-not a performance surface) + analytic VMEM footprints of the chosen
-BlockSpecs, which is the number that matters for the TPU target.
+"""Kernel micro-benchmarks: sweep the dispatch registry.
+
+Every kernel is timed under each *available* mode — ``ref`` (the jnp
+fallback serving CPU hot paths), ``interpret`` (the Pallas kernel body
+executed by the interpreter: a correctness harness, timed here so its
+cost trend is visible), and ``pallas`` when the backend probes as
+capable (TPU).  ``weight_transform`` additionally sweeps the per-shard
+extent sizes the decoupler's placement lanes feed it (full leaf down to
+a 4-way shard slice), with the tile sizes
+:func:`repro.configs.shapes.wt_shard_tiles` assigns each size.
+
+``--json-out BENCH_kernels.json`` emits the rows plus the registry's
+capability report — the CI bench-smoke artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -12,74 +23,136 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.configs.shapes import kernel_blocks, wt_shard_tiles
 from repro.kernels import ops
 
 
-def timeit(f, *a, n=5):
-    f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else \
-        jax.block_until_ready(f(*a))
+def timeit(f, *a, n=3):
+    jax.block_until_ready(f(*a))
     t0 = time.monotonic()
     for _ in range(n):
         jax.block_until_ready(f(*a))
     return (time.monotonic() - t0) / n
 
 
-def vmem_bytes_flash(bq=256, bk=256, dh=128):
+def vmem_bytes_flash(bq=None, bk=None, dh=128):
+    kb = kernel_blocks()
+    bq = bq or kb.flash_bq
+    bk = bk or kb.flash_bk
     # q + k + v + acc(f32) + m/l scratch
     return (bq * dh * 2 + 2 * bk * dh * 2 + bq * dh * 4
             + 2 * bq * 128 * 4)
 
 
+def _available_modes(requested=None):
+    modes = ["ref", "interpret"]
+    if all(ops.registry.pallas_supported(n)
+           for n in ("flash_attention", "decode_attention")):
+        modes.append("pallas")
+    if requested:
+        missing = [m for m in requested if m not in modes]
+        if missing:
+            raise SystemExit(
+                f"requested mode(s) {missing} unavailable on this "
+                f"backend (capable of: {modes}); see "
+                f"ops.registry.describe() for probe verdicts")
+        modes = [m for m in modes if m in requested]
+    return modes
+
+
+def _sweep(rows, name, build, modes, ref_bytes=0.0):
+    """Time one kernel closure under each dispatch mode.  ``build()``
+    returns (fn, args): rebuilt per mode so the fresh jit traces under
+    the newly-forced dispatch."""
+    for mode in modes:
+        ops.set_mode(mode)
+        try:
+            f, args = build()
+            t = timeit(f, *args)
+            rows.append([f"kernel/{name}/{mode}", t * 1e6,
+                         ref_bytes / t / 1e9 if ref_bytes else 0.0])
+        finally:
+            ops.set_mode(None)
+
+
 def run(args=None):
     r = np.random.default_rng(0)
     rows = []
+    modes = _available_modes(getattr(args, "modes", None))
 
-    B, H, K, S, dh = 1, 8, 2, 1024, 128
+    B, H, K, S, dh = 1, 4, 2, 256, 64
     q = jnp.asarray(r.standard_normal((B, S, H, dh)), jnp.bfloat16)
     k = jnp.asarray(r.standard_normal((B, S, K, dh)), jnp.bfloat16)
     v = jnp.asarray(r.standard_normal((B, S, K, dh)), jnp.bfloat16)
-    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True))
-    t = timeit(f, q, k, v)
-    rows.append(["kernel/flash_attention_xla_1k", t * 1e6,
-                 2 * 2 * B * H * S * S * dh / t / 1e9])
+    _sweep(rows, "flash_attention_256",
+           lambda: (jax.jit(lambda q, k, v: ops.flash_attention(
+               q, k, v, causal=True)), (q, k, v)), modes,
+           ref_bytes=2 * 2 * B * H * S * S * dh)
 
-    kc = jnp.asarray(r.standard_normal((4, K, 2048, dh)), jnp.bfloat16)
-    vc = kc
-    q1 = jnp.asarray(r.standard_normal((4, H, dh)), jnp.bfloat16)
-    pos = jnp.full((4,), 2047, jnp.int32)
-    f2 = jax.jit(lambda q, a, b, p: ops.decode_attention(q, a, b, p))
-    t = timeit(f2, q1, kc, vc, pos)
-    rows.append(["kernel/decode_attention_xla_2k", t * 1e6,
-                 kc.nbytes * 2 / t / 1e9])
+    kc = jnp.asarray(r.standard_normal((2, K, 512, dh)), jnp.bfloat16)
+    q1 = jnp.asarray(r.standard_normal((2, H, dh)), jnp.bfloat16)
+    pos = jnp.full((2,), 511, jnp.int32)
+    _sweep(rows, "decode_attention_512",
+           lambda: (jax.jit(lambda q, a, b, p: ops.decode_attention(
+               q, a, b, p)), (q1, kc, kc, pos)), modes,
+           ref_bytes=kc.nbytes * 2)
 
-    x = jnp.asarray(r.standard_normal((2, 8, 512, 64)), jnp.float32)
-    dt = jnp.abs(jnp.asarray(r.standard_normal((2, 8, 512)),
+    x = jnp.asarray(r.standard_normal((1, 4, 256, 64)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(r.standard_normal((1, 4, 256)),
                              jnp.float32)) * 0.1
-    A = -jnp.ones((8,))
-    Bm = jnp.asarray(r.standard_normal((2, 512, 64)), jnp.float32)
-    f3 = jax.jit(lambda *a: ops.ssd_scan(*a, bc=128))
-    t = timeit(f3, x, dt, A, Bm, Bm)
-    rows.append(["kernel/ssd_scan_xla_512", t * 1e6, 0.0])
+    A = -jnp.ones((4,))
+    Bm = jnp.asarray(r.standard_normal((1, 256, 64)), jnp.float32)
+    _sweep(rows, "ssd_scan_256",
+           lambda: (jax.jit(lambda *a: ops.ssd_scan(*a, bc=64)),
+                    (x, dt, A, Bm, Bm)), modes)
 
-    a = jnp.abs(jnp.asarray(r.standard_normal((2, 1024, 256)),
+    a = jnp.abs(jnp.asarray(r.standard_normal((1, 256, 128)),
                             jnp.float32)) * 0.3
-    b = jnp.asarray(r.standard_normal((2, 1024, 256)), jnp.float32)
-    f4 = jax.jit(ops.rglru_scan)
-    t = timeit(f4, a, b)
-    rows.append(["kernel/rglru_scan_xla_1k", t * 1e6, 0.0])
+    b = jnp.asarray(r.standard_normal((1, 256, 128)), jnp.float32)
+    _sweep(rows, "rglru_scan_256",
+           lambda: (jax.jit(ops.rglru_scan), (a, b)), modes)
 
-    w8 = jnp.asarray(r.integers(-127, 128, (4096, 4096)), jnp.int8)
-    sc = jnp.abs(jnp.asarray(r.standard_normal(4096), jnp.float32))
-    f5 = jax.jit(lambda w, s: ops.weight_transform(w, s))
-    t = timeit(f5, w8, sc)
-    rows.append(["kernel/weight_transform_16M", t * 1e6,
-                 w8.nbytes / t / 1e9])
+    # weight transform at the shard-slice sizes the placement lanes see:
+    # a 4M-element leaf whole, then its 2-way and 4-way column shards
+    n_full, m_full = 2048, 2048
+    w8_full = np.asarray(r.integers(-127, 128, (n_full, m_full)), np.int8)
+    sc_full = np.abs(r.standard_normal(m_full).astype(np.float32)) + 1e-3
+    for div in (1, 2, 4):
+        m = m_full // div
+        w8 = jnp.asarray(w8_full[:, :m])
+        sc = jnp.asarray(sc_full[:m])
+        bn, bm = wt_shard_tiles(w8.nbytes)
+        _sweep(rows, f"weight_transform_shard{div}_bn{bn}",
+               lambda w8=w8, sc=sc, bn=bn, bm=bm: (
+                   jax.jit(lambda w, s: ops.weight_transform(
+                       w, s, bn=bn, bm=bm)), (w8, sc)), modes,
+               ref_bytes=w8.nbytes)
 
-    # TPU-target VMEM budgets (static analysis of BlockSpecs)
+    # TPU-target VMEM budgets (static analysis of the configured blocks)
     rows.append(["kernel/flash_vmem_kb", vmem_bytes_flash() / 1024, 0.0])
     common.print_csv(["name", "us_per_call", "derived_gbps"], rows)
+
+    json_out = getattr(args, "json_out", None)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"bench": "kernels",
+                       "header": ["name", "us_per_call", "derived_gbps"],
+                       "registry": ops.registry.describe(),
+                       "rows": rows}, f, indent=2)
+        print(f"# wrote {json_out}")
     return rows
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default=None,
+                    help="also write rows + registry capability report "
+                         "as JSON (CI artifact)")
+    ap.add_argument("--modes", nargs="+", default=None,
+                    choices=["ref", "interpret", "pallas"],
+                    help="restrict the dispatch-mode sweep")
+    return run(ap.parse_args(argv))
+
+
 if __name__ == "__main__":
-    run()
+    main()

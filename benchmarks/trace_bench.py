@@ -16,7 +16,14 @@ per-strategy mean latency under the bursty Azure-like workload, plus
 ``--mesh`` sweeps shard-granular cold starts over simulated device
 meshes of 1 / 2 / 4 (λScale-style: every device brings its own
 ``--bandwidth-mbps`` store channel) and reports the critical-path load
-time per mesh size — the BENCH_sharded.json artifact.
+time per mesh size — the BENCH_sharded.json artifact.  ``--quant
+int8`` runs the same sweep from an int8-quantized deployment: the
+shard streams carry value+scale slices and the placement lanes run the
+per-shard ``weight_transform`` dequant before each commit (the
+BENCH_sharded_int8.json artifact).
+
+``--pallas {auto,pallas,interpret,ref}`` forces the kernel dispatch
+registry (default: auto — capability-probed per kernel).
 
 Run directly for CI's bench-smoke job:
 
@@ -228,9 +235,17 @@ def generate_run(args):
     return rows
 
 
+def _mesh_tag(args) -> str:
+    """Row prefix AND json bench name of the --mesh sweep (one source
+    so the artifact's bench field can't drift from its rows)."""
+    return "sharded_int8" if getattr(args, "quant", None) == "int8" \
+        else "sharded"
+
+
 def mesh_run(args):
     """--mesh: shard-granular cold starts on simulated meshes of
-    1 / 2 / 4 devices.
+    1 / 2 / 4 devices (``--quant int8``: from a quantized deployment,
+    with per-shard dequant on the placement lanes).
 
     Every mesh device brings its own ``--bandwidth-mbps`` store channel
     (``BandwidthModel(channels=n)``) — the λScale / HydraServe regime
@@ -259,15 +274,20 @@ def mesh_run(args):
     from repro.models.api import get_config
     from repro.store.store import BandwidthModel, WeightStore, deploy_model
 
-    # a mid-size LM (~155 MB f32) so retrieval dominates the pipeline at
-    # 200 MB/s — every sharded axis divides 4 (no replication fallback)
+    quant = getattr(args, "quant", None)
+    tag = _mesh_tag(args)
+    # a mid-size LM (~155 MB f32 / ~40 MB int8) so retrieval dominates
+    # the pipeline at 200 MB/s — every sharded axis divides 4 (no
+    # replication fallback) and d_ff/4 int8 column runs clear the
+    # byte-range floor (1024 B)
     cfg = dataclasses.replace(
-        get_config("smollm-360m", smoke=True), name="sharded-bench",
-        n_layers=8, d_model=384, n_heads=4, n_kv_heads=4, d_ff=3072,
+        get_config("smollm-360m", smoke=True), name=f"{tag}-bench",
+        n_layers=8, d_model=384, n_heads=4, n_kv_heads=4, d_ff=4096,
         vocab_size=12288)
     model = transformer.build(cfg)
-    root = tempfile.mkdtemp(prefix="cicada-sharded-bench-")
-    deploy_model(WeightStore(root), model, cfg.name, jax.random.key(0))
+    root = tempfile.mkdtemp(prefix=f"cicada-{tag}-bench-")
+    deploy_model(WeightStore(root), model, cfg.name, jax.random.key(0),
+                 quant=quant)
     batch = common.make_batch(cfg)
 
     rows = []
@@ -294,10 +314,10 @@ def mesh_run(args):
         R = [e for e in best.trace.events if e.stage == "R"]
         r_window = max(e.t_end for e in R) - min(e.t_start for e in R)
         load_ms[n] = best.trace.total_time() * 1e3
-        rows.append([f"sharded/mesh{n}/load_ms", load_ms[n],
+        rows.append([f"{tag}/mesh{n}/load_ms", load_ms[n],
                      r_window * 1e3])
     if 1 in load_ms and 4 in load_ms:
-        rows.append(["sharded/mesh4_vs_mesh1/speedup",
+        rows.append([f"{tag}/mesh4_vs_mesh1/speedup",
                      load_ms[1] / load_ms[4], 0.0])
     return rows
 
@@ -309,7 +329,7 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
     if getattr(args, "mesh", False):
         rows = mesh_run(args)
         common.print_csv(["name", "load_ms", "derived"], rows)
-        _write_json(args, rows, "sharded")
+        _write_json(args, rows, _mesh_tag(args))
         return rows
     if getattr(args, "workload", "trace") == "generate":
         rows = generate_run(args)
@@ -359,7 +379,8 @@ def _write_json(args, rows, bench: str):
     json_out = getattr(args, "json_out", None)
     if json_out:
         header = {"generate": ["name", "value", "derived"],
-                  "sharded": ["name", "load_ms", "derived"]}.get(
+                  "sharded": ["name", "load_ms", "derived"],
+                  "sharded_int8": ["name", "load_ms", "derived"]}.get(
             bench, ["name", "us_per_call", "derived"])
         with open(json_out, "w") as f:
             json.dump({"bench": bench, "header": header, "rows": rows},
@@ -390,7 +411,19 @@ def main(argv=None):
                     help="shard-granular cold-start sweep over device "
                          "meshes 1/2/4 (one store channel per device); "
                          "emits the BENCH_sharded.json rows")
-    return run(ap.parse_args(argv))
+    ap.add_argument("--quant", default=None, choices=["int8"],
+                    help="deploy the --mesh sweep's model quantized: "
+                         "shard streams carry value+scale slices and "
+                         "placement lanes run the per-shard dequant")
+    ap.add_argument("--pallas", default=None,
+                    choices=["auto", "pallas", "interpret", "ref"],
+                    help="force the kernel dispatch registry (default: "
+                         "capability-probed auto)")
+    args = ap.parse_args(argv)
+    if args.pallas:
+        from repro.kernels import ops
+        ops.set_mode(None if args.pallas == "auto" else args.pallas)
+    return run(args)
 
 
 if __name__ == "__main__":

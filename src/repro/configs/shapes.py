@@ -49,3 +49,57 @@ def smoke_cell(kind: str) -> ShapeCell:
     return {"train": ShapeCell("smoke_train", "train", 32, 2),
             "prefill": ShapeCell("smoke_prefill", "prefill", 32, 2),
             "decode": ShapeCell("smoke_decode", "decode", 64, 2)}[kind]
+
+
+# ---------------------------------------------------------------------------
+# kernel block sizes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelBlocks:
+    """Tile sizes for every Pallas kernel — the single source the
+    dispatch registry (:mod:`repro.kernels.ops`) derives its block
+    shapes from, instead of per-call literals scattered through the
+    callers.
+
+    The TPU profile is MXU/VPU-aligned (multiples of 128 on the lane
+    dim, tiles sized to keep the working set inside ~16 MB VMEM); the
+    interpret profile shrinks every tile so the Python-level interpret
+    loop stays tractable on CPU correctness runs.
+    """
+    flash_bq: int = 256          # flash attention query tile
+    flash_bk: int = 256          # flash attention key/value tile
+    flash_ref_bk: int = 1024     # jnp-fallback KV chunk (trace-time loop)
+    decode_bs: int = 512         # decode attention cache-sequence tile
+    ssd_bc: int = 128            # SSD chunk length
+    rglru_bc: int = 256          # RG-LRU sequence chunk
+    wt_bn: int = 256             # weight transform row tile
+    wt_bm: int = 512             # weight transform column (lane) tile
+
+
+_KERNEL_BLOCKS = {
+    # deployment target: real TPU lowering
+    "tpu": KernelBlocks(),
+    # interpret mode executes the kernel body per grid cell in Python —
+    # big grids are fine (cheap cells), big *tiles* are fine (vectorized
+    # cells); the defaults hold, minus the decode tile (whose split-K
+    # scratch merge dominates interpret cost)
+    "interpret": KernelBlocks(decode_bs=128),
+}
+
+
+def kernel_blocks(profile: str = "tpu") -> KernelBlocks:
+    """Block-size profile for a dispatch mode ('tpu' | 'interpret')."""
+    return _KERNEL_BLOCKS[profile]
+
+
+def wt_shard_tiles(nbytes: int) -> Tuple[int, int]:
+    """Weight-transform tile for a *per-shard* extent of ``nbytes`` —
+    small shard slices (a unit split 4+ ways) shrink the row tile so
+    the grid still has >= ~4 cells to parallelize over."""
+    kb = kernel_blocks()
+    if nbytes >= 4 << 20:
+        return kb.wt_bn, kb.wt_bm
+    if nbytes >= 256 << 10:
+        return kb.wt_bn // 2, kb.wt_bm
+    return max(8, kb.wt_bn // 8), kb.wt_bm

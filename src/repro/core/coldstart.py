@@ -144,22 +144,19 @@ class ColdStartEngine:
         ``weight_transform`` kernel) + device placement (one batched
         transfer per unit).
 
-        prefetched: {leaf: default-device array} already placed by the
-        shard committer — those leaves skip the transfer here and A
-        only waits on them."""
+        prefetched: {leaf: default-device array} already placed — and,
+        for dequant/cast leaves, already transformed — by the shard
+        committer's placement lane; those leaves skip the transfer (and
+        the transform) here and A only waits on them."""
         flat = {}
         put_names, put_arrs = [], []
         for name, (arr, scale) in leaves.items():
-            transformed = scale is not None or (
-                self.apply_dtype is not None and
-                np.issubdtype(arr.dtype, np.floating))
-            if prefetched is not None and name in prefetched \
-                    and not transformed:
+            if prefetched is not None and name in prefetched:
                 flat[name] = prefetched[name]
             elif scale is not None:                    # int8 extent
                 out_dt = self.apply_dtype or jnp.float32
-                deq = ops.weight_transform(jnp.asarray(arr),
-                                           jnp.asarray(scale),
+                a2 = jnp.asarray(arr).reshape(-1, arr.shape[-1])
+                deq = ops.weight_transform(a2, jnp.asarray(scale),
                                            out_dtype=out_dt)
                 flat[name] = deq.reshape(self._leaf_shape(abstract, name))
             elif self.apply_dtype is not None and \
@@ -182,11 +179,12 @@ class ColdStartEngine:
         compute_tree lives on the default device and feeds the
         pipeline's E — byte-for-byte the single-device application, so
         the first request's logits are bit-identical regardless of the
-        mesh.  mesh_tree (mesh mode only) is the unit's steady-state
-        sharded leaves: stitched from the shards' eagerly-committed
-        device buffers where possible, ``device_put`` against the
-        resolved NamedSharding for transformed (dequant/cast) leaves.
-        """
+        mesh (the per-shard transform is elementwise: dequant/cast of a
+        slice equals the slice of the dequant/cast).  mesh_tree (mesh
+        mode only) is the unit's steady-state sharded leaves: stitched
+        from the shards' eagerly-committed — transformed, for
+        dequant/cast leaves — device buffers where possible, raw
+        per-device transfers otherwise."""
         data: Optional[ShardedUnitData] = None
         if isinstance(leaves, ShardedUnitData):
             data = leaves
@@ -211,8 +209,7 @@ class ColdStartEngine:
             transformed = scale is not None or (
                 self.apply_dtype is not None and
                 np.issubdtype(arr.dtype, np.floating))
-            if data is not None and not transformed and \
-                    data.plan.commit[name]:
+            if data is not None and data.plan.commit[name]:
                 dev[name] = data.global_array(name)    # metadata stitch
                 continue
             sharding = specs[name]

@@ -20,7 +20,12 @@ complete out of order *across shards, not just units* — a landed shard
 is immediately committed to its target devices (``jax.device_put``
 inside :meth:`ShardedUnitData.add_shard`) without waiting for
 siblings, and ``ready[unit]`` publishes when the unit's **last** shard
-lands.  Without a mesh the seed's unit-granular path is unchanged.
+lands.  Quantized/castable leaves participate too: their shard streams
+carry value slices plus per-column scale slices, and the placement
+lane runs the ``weight_transform`` kernel on each landed slice before
+its commit — the weight-application *compute* phase is itself
+pipelined per shard (Cicada's decoupling, pushed one level down).
+Without a mesh the seed's unit-granular path is unchanged.
 
 In the PISeL baseline the two phases are fused and strictly ordered;
 ``fetch_sync`` provides that path.
@@ -258,8 +263,9 @@ class WeightDecoupler:
     def _commit_shard(self, unit: str, shard: int, data: ShardedUnitData,
                       payload, merged: bool):
         try:
-            # host merge (cache path only) + eager mesh commit; exactly
-            # one lane — the unit-completing one, AFTER the compute
+            # host merge (cache path only) + per-shard weight_transform
+            # of dequant/cast pieces + eager mesh commit; exactly one
+            # lane — the unit-completing one, AFTER the compute
             # prefetch is in place — gets last=True and publishes
             last = data.add_shard(shard, payload, merged=merged)
             with self.cv:

@@ -23,10 +23,19 @@ the already-committed per-device buffers with
 ``jax.make_array_from_single_device_arrays`` (a metadata stitch, no
 data movement).
 
+Leaves the apply path *transforms* — int8-quantized (per-column scales
+live at the tail of the payload) and floating leaves under an
+``apply_dtype`` cast — are sharded like any other leaf: each stream
+reads its value slice (plus, for quantized leaves, the f32 scale
+entries of its columns) and its placement lane runs the
+``weight_transform`` kernel on the slice *before* the commit, so the
+compute-bound weight-application phase is pipelined per shard instead
+of serialized at the unit's apply event.  Bit-identity with the
+whole-read dequant path holds because the transform is elementwise
+(value = f32(w)·f32(scale[col]) cast once, independent of tiling).
+
 Leaves whose resolved spec is replication (including any axis that
-does not divide its dimension — ``_guarded_spec``'s fallback) and
-int8-quantized leaves (their payload interleaves values and scales,
-and dequantization is the *weight application* compute phase) are read
+does not divide its dimension — ``_guarded_spec``'s fallback) are read
 whole by exactly one stream, round-robined across shards for balance.
 """
 from __future__ import annotations
@@ -36,9 +45,11 @@ import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import ShardingRules, leaf_specs
+from repro.kernels import ops
 from repro.store.store import slice_byte_runs
 
 # Shard slices whose contiguous runs would fall below this floor are
@@ -85,6 +96,7 @@ class UnitShardPlan:
     quant: Dict[str, bool]                 # leaf -> int8-stored
     commit: Dict[str, bool]                # leaf -> eager device commit
     transformed: Dict[str, bool]           # leaf -> dequant/cast at apply
+    out_dtype: Dict[str, Any]              # leaf -> transform target (or None)
     tag: str                               # mesh-shape + rules fingerprint
 
     @property
@@ -121,10 +133,11 @@ def plan_unit(store, model_name: str, unit: str, abstract_unit: PyTree,
     owned by the first device that holds it (replicas commit without
     re-reading), whole-payload leaves round-robin across streams.
 
-    apply_dtype: the engine's weight-application cast target — leaves
-    the apply path will transform (quantized, or floating under a
-    cast) are never eagerly committed: their raw-dtype device buffers
-    would be discarded and re-transferred post-transform."""
+    apply_dtype: the engine's weight-application cast target.  Leaves
+    the apply path transforms — quantized, or floating under a cast —
+    record their ``out_dtype`` so the placement lane can run the
+    per-shard ``weight_transform`` before committing; their device
+    buffers hold the *transformed* dtype."""
     devices = list(mesh.devices.flatten())
     pos = {d: i for i, d in enumerate(devices)}
     n = len(devices)
@@ -136,6 +149,7 @@ def plan_unit(store, model_name: str, unit: str, abstract_unit: PyTree,
     quant: Dict[str, bool] = {}
     commit: Dict[str, bool] = {}
     transformed: Dict[str, bool] = {}
+    out_dtype: Dict[str, Any] = {}
     rr = 0
     for rec in recs:
         leaf = rec["path"]
@@ -143,19 +157,23 @@ def plan_unit(store, model_name: str, unit: str, abstract_unit: PyTree,
         shapes[leaf] = shape
         dtypes[leaf] = rec["dtype"]
         quant[leaf] = rec.get("quant") == "int8"
-        transformed[leaf] = quant[leaf] or (
-            apply_dtype is not None and
-            np.issubdtype(np.dtype(rec["dtype"]), np.floating))
+        if quant[leaf]:
+            out_dtype[leaf] = apply_dtype or jnp.float32
+        elif apply_dtype is not None and \
+                np.issubdtype(np.dtype(rec["dtype"]), np.floating):
+            out_dtype[leaf] = apply_dtype
+        else:
+            out_dtype[leaf] = None
+        transformed[leaf] = out_dtype[leaf] is not None
         sharding = specs[leaf]
         replicated = all(ax is None for ax in tuple(sharding.spec))
         per_device = rec["nbytes"] if replicated else rec["nbytes"] // n
-        commit[leaf] = not transformed[leaf] and \
-            per_device >= COMMIT_FLOOR_BYTES
-        whole = quant[leaf] or replicated
+        commit[leaf] = per_device >= COMMIT_FLOOR_BYTES
+        whole = replicated
         groups: Dict[Tuple, Tuple[Index, List[Any]]] = {}
         if not whole:
             imap = sharding.devices_indices_map(shape)
-            itemsize = np.dtype(rec["dtype"]).itemsize
+            itemsize = 1 if quant[leaf] else np.dtype(rec["dtype"]).itemsize
             for d in devices:
                 idx = imap[d]
                 key = _normalize(idx, shape)
@@ -175,55 +193,104 @@ def plan_unit(store, model_name: str, unit: str, abstract_unit: PyTree,
             nb = store.leaf_slice_nbytes(model_name, unit, leaf, idx)
             pieces[owner].append(LeafPiece(leaf, idx, nb, tuple(ds)))
     return UnitShardPlan(unit, mesh, specs, pieces, shapes, dtypes, quant,
-                         commit, transformed, plan_tag(mesh, rules))
+                         commit, transformed, out_dtype,
+                         plan_tag(mesh, rules))
 
 
 class ShardedUnitData:
     """Per-load accumulation of one unit's arriving shards.
 
-    ``add_shard`` (called on I/O threads, one call per shard) merges
-    the host-side slices into full leaves for the pipeline's compute
-    units and eagerly commits each slice to its target devices.  When
-    the last shard has landed, :meth:`host_leaves` feeds the standard
-    weight-application path and :meth:`global_array` stitches the
-    committed buffers into the steady-state sharded leaf.
+    ``add_shard`` (called on placement lanes, one call per shard)
+    merges the host-side slices into full leaves for the pipeline's
+    compute units, runs the per-shard ``weight_transform`` (dequant /
+    cast) on transformed leaves, and eagerly commits each — possibly
+    transformed — slice to its target devices.  When the last shard has
+    landed, :meth:`host_leaves` feeds the standard weight-application
+    path and :meth:`global_array` stitches the committed buffers into
+    the steady-state sharded leaf.
     """
 
     def __init__(self, plan: UnitShardPlan):
         self.plan = plan
         self._lock = threading.Lock()
         self._host: Dict[str, np.ndarray] = {}
+        # transformed leaves also merge their *dequantized/cast* shard
+        # outputs host-side, so the compute prefetch reuses the work the
+        # placement lanes already did instead of re-transforming the
+        # full leaf (the transform is elementwise: merged slices ==
+        # whole-leaf transform, bit for bit)
+        self._host_t: Dict[str, np.ndarray] = {}
         self._scales: Dict[str, Optional[np.ndarray]] = {}
         self._bufs: Dict[Tuple[str, int], jax.Array] = {}
         self._compute: Optional[Dict[str, jax.Array]] = None
         self._arrived = 0
 
+    def _host_alloc_locked(self, leaf: str) -> np.ndarray:
+        full = self._host.get(leaf)
+        if full is None:
+            dt = np.int8 if self.plan.quant[leaf] \
+                else np.dtype(self.plan.dtypes[leaf])
+            full = np.empty(self.plan.shapes[leaf], dt)
+            self._host[leaf] = full
+            # quantized leaves assemble their scale vector from the
+            # per-shard column slices; shards with overlapping columns
+            # write identical values
+            self._scales[leaf] = (
+                np.empty(self.plan.shapes[leaf][-1], np.float32)
+                if self.plan.quant[leaf] else None)
+        return full
+
     def host_dest(self, leaf: str, index: Index) -> np.ndarray:
         """A writable view of ``leaf[index]`` in the preassembled full
         host leaf — shard reads gather straight into it (zero staging
-        copies on the cache-less path)."""
+        copies on the cache-less path).  Quantized leaves expose the
+        int8 value region at the leaf's logical shape; the scale slice
+        travels in the payload and is merged by :meth:`add_shard`."""
         with self._lock:
-            full = self._host.get(leaf)
+            full = self._host_alloc_locked(leaf)
+        return full[tuple(index)]
+
+    def _transform(self, arr: np.ndarray, scale: Optional[np.ndarray],
+                   leaf: str) -> jax.Array:
+        """The fused apply stage for one piece: dequant/cast ``arr``
+        (any shape; columns = its last dim) via the ``weight_transform``
+        kernel, tiled for the piece's size."""
+        a2 = jnp.asarray(arr).reshape(-1, arr.shape[-1]) \
+            if arr.ndim >= 2 else jnp.asarray(arr)[None]
+        bn, bm = ops.wt_shard_blocks(arr.nbytes)
+        t = ops.weight_transform(
+            a2, None if scale is None else jnp.asarray(scale),
+            out_dtype=self.plan.out_dtype[leaf], bn=bn, bm=bm)
+        return t.reshape(arr.shape)
+
+    def _merge_transformed(self, leaf: str, index: Index, t: jax.Array):
+        """Gather one ranged piece's transformed output into the full
+        transformed host leaf the compute prefetch ships (whole-payload
+        pieces write ``_host_t`` directly in :meth:`add_shard`)."""
+        with self._lock:
+            full = self._host_t.get(leaf)
             if full is None:
                 full = np.empty(self.plan.shapes[leaf],
-                                np.dtype(self.plan.dtypes[leaf]))
-                self._host[leaf] = full
-                self._scales[leaf] = None
-        return full[tuple(index)]
+                                self.plan.out_dtype[leaf])
+                self._host_t[leaf] = full
+        full[tuple(index)] = np.asarray(t)
 
     def add_shard(self, shard: int, payload: ShardPayload,
                   merged: bool = False) -> bool:
-        """``merged=True``: ranged pieces were gathered straight into
-        the full host leaves via :meth:`host_dest` — only device
-        placement remains here.  Returns True for exactly one caller:
-        the one whose shard completed the unit (after the compute
-        prefetch below is in place — the publish signal)."""
+        """``merged=True``: ranged pieces' *values* were gathered
+        straight into the full host leaves via :meth:`host_dest` —
+        scale merging, the per-shard transform and device placement
+        remain here.  Returns True for exactly one caller: the one
+        whose shard completed the unit (after the compute prefetch
+        below is in place — the publish signal)."""
         plan = self.plan
         # all of this shard's device commits go out as ONE batched
         # device_put (per-piece dispatch overhead would rival the I/O
-        # it overlaps at higher shard counts)
+        # it overlaps at higher shard counts); transformed pieces run
+        # the weight_transform kernel here — on the placement lane, the
+        # moment the shard lands — and commit the transformed dtype
         put_keys: List[Tuple[str, int]] = []
-        put_arrs: List[np.ndarray] = []
+        put_arrs: List[Any] = []
         put_devs: List[Any] = []
         for (leaf, arr, scale, index), piece in zip(payload,
                                                     plan.pieces[shard]):
@@ -231,6 +298,12 @@ class ShardedUnitData:
                 with self._lock:
                     self._host[leaf] = arr
                     self._scales[leaf] = scale
+                src = arr
+                if plan.transformed[leaf]:
+                    src = np.asarray(self._transform(arr, scale, leaf)
+                                     ).reshape(plan.shapes[leaf])
+                    with self._lock:
+                        self._host_t[leaf] = src
                 if plan.commit[leaf]:
                     sharding = plan.specs[leaf]
                     replicated = all(
@@ -239,22 +312,28 @@ class ShardedUnitData:
                         sharding.devices_indices_map(plan.shapes[leaf])
                     for d in piece.devices:
                         put_keys.append((leaf, d.id))
-                        put_arrs.append(arr if replicated
-                                        else arr[imap[d]])
+                        put_arrs.append(src if replicated
+                                        else src[imap[d]])
                         put_devs.append(d)
                 continue
+            if plan.quant[leaf] and scale is not None:
+                with self._lock:                     # merge scale columns
+                    self._host_alloc_locked(leaf)
+                    lo = 0 if index[-1].start is None else \
+                        int(index[-1].start)
+                    self._scales[leaf][lo:lo + scale.shape[0]] = scale
             if not merged:
                 with self._lock:
-                    full = self._host.get(leaf)
-                    if full is None:
-                        full = np.empty(plan.shapes[leaf], arr.dtype)
-                        self._host[leaf] = full
-                        self._scales[leaf] = None
+                    full = self._host_alloc_locked(leaf)
                 full[tuple(index)] = arr             # disjoint per shard
+            src = None
+            if plan.transformed[leaf]:               # fused per-shard apply
+                src = self._transform(arr, scale, leaf)
+                self._merge_transformed(leaf, index, src)
             if plan.commit[leaf]:
                 for d in piece.devices:              # eager mesh commit
                     put_keys.append((leaf, d.id))
-                    put_arrs.append(arr)
+                    put_arrs.append(src if src is not None else arr)
                     put_devs.append(d)
         if put_arrs:
             bufs = jax.device_put(put_arrs, put_devs)
@@ -267,13 +346,17 @@ class ShardedUnitData:
             # the unit is complete: issue the (async) default-device
             # placement of the merged full leaves here, so the weight
             # unit's A is a metadata stitch + transfer wait instead of
-            # a critical-path host-to-device copy of the whole unit
-            # (transformed leaves excluded — the apply path recasts
-            # them and would discard a raw-dtype buffer)
-            names = [leaf for leaf, sc in self._scales.items()
-                     if sc is None and not plan.transformed[leaf]]
-            bufs = jax.device_put([self._host[n] for n in names])
-            self._compute = dict(zip(names, bufs))
+            # a critical-path host-to-device copy of the whole unit.
+            # Transformed leaves ship the merged per-shard
+            # weight_transform outputs — the dequant/cast compute phase
+            # already ran on the placement lanes, so A just waits
+            names = [leaf for leaf in self._host
+                     if not plan.transformed[leaf]]
+            srcs = [self._host[n] for n in names] + \
+                [self._host_t[n] for n in self._host_t]
+            bufs = jax.device_put(srcs)
+            self._compute = dict(zip(list(names) + list(self._host_t),
+                                     bufs))
         return last
 
     @property
@@ -286,16 +369,19 @@ class ShardedUnitData:
 
     def host_leaves(self) -> Dict[str, Tuple[np.ndarray,
                                              Optional[np.ndarray]]]:
-        """The merged {leaf: (array, scale)} dict — identical in form
-        (and bytes) to ``WeightStore.deserialize`` of the whole unit."""
+        """The merged {leaf: (array, scale)} dict — byte-identical to
+        ``WeightStore.deserialize`` of the whole unit (quantized leaves
+        merged from ranged shards carry the leaf's *logical* shape
+        rather than deserialize's 2-D view; consumers reshape)."""
         with self._lock:
             return {k: (v, self._scales[k]) for k, v in self._host.items()}
 
     @property
     def compute_bufs(self) -> Dict[str, jax.Array]:
         """Default-device placements of the merged full leaves (issued
-        by the last shard's commit; excludes transformed leaves —
-        dequant/cast is the weight-application compute phase)."""
+        by the last shard's commit).  Covers every leaf: transformed
+        ones ship their merged per-shard ``weight_transform`` outputs,
+        so the weight unit's A never recomputes the apply phase."""
         return self._compute or {}
 
     def global_array(self, leaf: str) -> jax.Array:

@@ -1,4 +1,4 @@
-"""Kernel dispatch layer.
+"""Kernel dispatch registry.
 
 Every op has three implementations:
 
@@ -6,23 +6,46 @@ Every op has three implementations:
   * **interpret**— the same kernel body executed in interpret mode (CPU
                    correctness validation; enabled in kernel tests via
                    ``REPRO_PALLAS=interpret``);
-  * **xla**      — a memory-efficient pure-jnp fallback with identical
+  * **ref**      — a memory-efficient pure-jnp fallback with identical
                    semantics.  This is what the CPU dry-run lowers (the
                    roofline math — FLOPs, bytes, collectives — is the
                    same), and what tests use as the "efficient oracle".
+                   (``xla`` is accepted as a legacy alias.)
 
-Dispatch: ``REPRO_PALLAS`` env var ∈ {auto (default), pallas, interpret,
-xla}.  ``auto`` → pallas on TPU backends, xla elsewhere.
+Dispatch goes through one :class:`KernelRegistry`:
+
+  * **capability probing** — the first time a kernel is dispatched in
+    ``auto`` mode, the registry attempts to *lower* its Pallas callable
+    on the active backend with tiny inputs and caches the verdict.  A
+    backend that can lower the kernel (TPU) serves ``pallas``; one that
+    cannot (CPU/GPU: "Only interpret mode is supported") serves the
+    ``ref`` fallback.  The probe runs once per kernel per process —
+    never on the hot path.
+  * **forcing** — ``REPRO_PALLAS`` ∈ {auto (default), pallas,
+    interpret, ref} overrides the probe, and :func:`set_mode` (the
+    ``--pallas`` launcher flag) overrides the env var.  Forcing
+    ``pallas`` on a backend that cannot lower it fails loudly at call
+    time — it never silently degrades.
+  * **block sizes** — tile shapes come from
+    :func:`repro.configs.shapes.kernel_blocks` (one ``tpu`` profile,
+    one ``interpret`` profile), not per-call literals.
+
+Mode is resolved at *trace* time: jitted callers (the serving engine's
+prefill/decode steps) bake the resolved kernel in, so set the mode
+before building schedulers — :func:`fingerprint` keys caches that must
+retrace on a change.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 import os
-from typing import Optional
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.shapes import kernel_blocks, wt_shard_tiles
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
@@ -32,12 +55,145 @@ from repro.kernels.weight_transform import weight_transform as _wt_pallas
 
 NEG_INF = -1e30
 
+MODES = ("auto", "pallas", "interpret", "ref")
 
-def _mode() -> str:
-    m = os.environ.get("REPRO_PALLAS", "auto")
-    if m == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return m
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel: its Pallas entry point and a probe that
+    lowers it with minimal inputs (run once, verdict cached)."""
+    name: str
+    pallas_fn: Callable
+    probe: Callable[[], Any]
+
+
+class KernelRegistry:
+    """Per-process dispatch state: forced mode + cached probe verdicts."""
+
+    def __init__(self):
+        self._kernels: Dict[str, KernelSpec] = {}
+        self._verdicts: Dict[str, bool] = {}
+        self._probe_errors: Dict[str, str] = {}
+        self._forced: Optional[str] = None
+        self._lock = threading.Lock()
+        # (kernel, mode) -> trace-time dispatch count: observability
+        # that a given path (e.g. the serving engine's jitted step)
+        # actually routed through a kernel, and in which mode
+        self.dispatch_counts: Dict[Tuple[str, str], int] = {}
+
+    def register(self, spec: KernelSpec):
+        self._kernels[spec.name] = spec
+
+    # ------------------------------------------------------------- control
+    @staticmethod
+    def _normalize(mode: str) -> str:
+        mode = {"xla": "ref"}.get(mode, mode)     # legacy alias
+        if mode not in MODES:
+            raise ValueError(
+                f"REPRO_PALLAS/--pallas must be one of {MODES}, "
+                f"got {mode!r}")
+        return mode
+
+    def set_mode(self, mode: Optional[str]):
+        """Force a dispatch mode process-wide (``--pallas`` flag).
+        ``None``/'auto' restores probe-based resolution; overrides the
+        ``REPRO_PALLAS`` env var."""
+        self._forced = None if mode is None else self._normalize(mode)
+
+    # ------------------------------------------------------------- probing
+    def pallas_supported(self, name: str) -> bool:
+        """Can this backend lower the kernel's Pallas callable?  Probed
+        once (tiny inputs, ``.lower()`` only — no execution) and
+        cached for the process lifetime."""
+        with self._lock:
+            if name not in self._verdicts:
+                try:
+                    self._kernels[name].probe()
+                    self._verdicts[name] = True
+                except Exception as e:      # lowering rejected the kernel
+                    self._verdicts[name] = False
+                    self._probe_errors[name] = f"{type(e).__name__}: {e}"
+            return self._verdicts[name]
+
+    # ------------------------------------------------------------ resolve
+    def mode(self, name: str) -> str:
+        """The dispatch mode this call will take, resolving ``auto``
+        through the cached capability probe."""
+        m = self._forced or self._normalize(
+            os.environ.get("REPRO_PALLAS", "auto"))
+        if m == "auto":
+            return "pallas" if self.pallas_supported(name) else "ref"
+        return m
+
+    def dispatch(self, name: str) -> str:
+        """:meth:`mode`, counted — the op wrappers call this once per
+        trace so callers can assert a path routed through a kernel."""
+        m = self.mode(name)
+        with self._lock:
+            key = (name, m)
+            self.dispatch_counts[key] = self.dispatch_counts.get(key, 0) + 1
+        return m
+
+    def fingerprint(self) -> Tuple[str, str]:
+        """Cheap dispatch-cache key: (forced-or-env mode, backend).
+        Within one process the resolved per-kernel mode is a
+        deterministic function of exactly these two, so this
+        discriminates every case the resolved modes would — WITHOUT
+        forcing capability probes (probing all kernels eagerly costs
+        ~1.7 s on CPU and would land on the first-token path)."""
+        m = self._forced or self._normalize(
+            os.environ.get("REPRO_PALLAS", "auto"))
+        return (m, jax.default_backend())
+
+    def modes(self) -> Dict[str, str]:
+        """Resolved mode per kernel (probes on first call in auto)."""
+        return {n: self.mode(n) for n in self._kernels}
+
+    def modes_for(self, fingerprint: Tuple[str, str]) -> Dict[str, str]:
+        """Resolved mode per kernel under a saved :meth:`fingerprint` —
+        exact even after a later ``set_mode``, since auto's probe-based
+        resolution is fixed per (backend, process)."""
+        mode, _backend = fingerprint
+        if mode == "auto":
+            return {n: ("pallas" if self.pallas_supported(n) else "ref")
+                    for n in self._kernels}
+        return {n: mode for n in self._kernels}
+
+    def describe(self) -> Dict[str, Dict[str, Any]]:
+        """Per-kernel dispatch report (benchmarks / `stats()` surface)."""
+        out = {}
+        for n in sorted(self._kernels):
+            m = self.mode(n)
+            out[n] = {"mode": m,
+                      "pallas_supported": self.pallas_supported(n)}
+            if n in self._probe_errors:
+                out[n]["probe_error"] = self._probe_errors[n]
+        return out
+
+
+registry = KernelRegistry()
+
+
+def set_mode(mode: Optional[str]):
+    """Module-level convenience for launchers: force the dispatch mode
+    (auto / pallas / interpret / ref)."""
+    registry.set_mode(mode)
+
+
+def _blocks():
+    """Active block-size profile: the interpret profile when interpret
+    mode is forced, the TPU profile otherwise."""
+    forced = registry._forced or os.environ.get("REPRO_PALLAS", "auto")
+    return kernel_blocks(
+        "interpret" if forced == "interpret" else "tpu")
+
+
+def _register(name: str, pallas_fn: Callable, probe: Callable[[], Any]):
+    registry.register(KernelSpec(name, pallas_fn, probe))
 
 
 # ---------------------------------------------------------------------------
@@ -128,15 +284,41 @@ def flash_attention_kvmajor(q: jax.Array, k: jax.Array, v: jax.Array, *,
     chunked prefill attends directly against cache slices, no transpose).
     Returns (B, S, H, dh)."""
     qt = jnp.swapaxes(q, 1, 2)
-    mode = _mode()
+    mode = registry.dispatch("flash_attention")
+    kb = _blocks()
     if mode == "pallas":
-        o = _flash_pallas(qt, k, v, causal=causal, window=window)
-    elif mode == "interpret":
         o = _flash_pallas(qt, k, v, causal=causal, window=window,
-                          interpret=True)
+                          bq=kb.flash_bq, bk=kb.flash_bk)
+    elif mode == "interpret":
+        # interpret path pads nothing: shrink tiles to divide S/T
+        bq = _divisor_tile(kb.flash_bq, qt.shape[2])
+        bk = _divisor_tile(kb.flash_bk, k.shape[2])
+        o = _flash_pallas(qt, k, v, causal=causal, window=window,
+                          bq=bq, bk=bk, interpret=True)
     else:
-        o = _xla_flash(qt, k, v, causal=causal, window=window)
+        o = _xla_flash(qt, k, v, causal=causal, window=window,
+                       bk=kb.flash_ref_bk)
     return jnp.swapaxes(o, 1, 2)
+
+
+def _divisor_tile(b: int, dim: int) -> int:
+    """Largest tile <= b that divides dim (kernels assert divisibility;
+    smoke models bring odd sequence lengths)."""
+    b = min(b, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _probe_flash():
+    _flash_pallas.lower(
+        jnp.zeros((1, 1, 128, 128), jnp.float32),
+        jnp.zeros((1, 1, 128, 128), jnp.float32),
+        jnp.zeros((1, 1, 128, 128), jnp.float32),
+        causal=True, window=0, bq=128, bk=128)
+
+
+_register("flash_attention", _flash_pallas, _probe_flash)
 
 
 # ---------------------------------------------------------------------------
@@ -145,14 +327,29 @@ def flash_attention_kvmajor(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, *, window: int = 0) -> jax.Array:
-    """q: (B, H, dh); caches: (B, S_max, K, dh); pos: (B,). -> (B, H, dh)."""
-    mode = _mode()
+    """q: (B, H, dh); caches: (B, K, S_max, dh) kv-head-major;
+    pos: (B,). -> (B, H, dh)."""
+    mode = registry.dispatch("decode_attention")
+    kb = _blocks()
     if mode == "pallas":
-        return _decode_pallas(q, k_cache, v_cache, pos, window=window)
-    if mode == "interpret":
         return _decode_pallas(q, k_cache, v_cache, pos, window=window,
-                              interpret=True)
+                              bs=kb.decode_bs)
+    if mode == "interpret":
+        bs = _divisor_tile(kb.decode_bs, k_cache.shape[2])
+        return _decode_pallas(q, k_cache, v_cache, pos, window=window,
+                              bs=bs, interpret=True)
     return ref.decode_attention(q, k_cache, v_cache, pos, window=window)
+
+
+def _probe_decode():
+    _decode_pallas.lower(
+        jnp.zeros((1, 2, 128), jnp.float32),
+        jnp.zeros((1, 1, 128, 128), jnp.float32),
+        jnp.zeros((1, 1, 128, 128), jnp.float32),
+        jnp.zeros((1,), jnp.int32), window=0, bs=128)
+
+
+_register("decode_attention", _decode_pallas, _probe_decode)
 
 
 # ---------------------------------------------------------------------------
@@ -204,21 +401,21 @@ def _xla_ssd(x, dt, A, B, C, *, bc: int = 128):
     return y.astype(x.dtype)
 
 
-def ssd_scan(x, dt, A, B, C, *, bc: int = 128):
+def ssd_scan(x, dt, A, B, C, *, bc: Optional[int] = None):
     """Shapes as in ref.ssd.  Returns y (b, nh, S, dp).
 
     S is padded up to a multiple of the chunk size with dt = 0 steps
     (decay exp(0·A) = 1, zero input -> state unaffected); the padded
     outputs are sliced off."""
     S = x.shape[2]
-    bc = min(bc, S)
+    bc = min(bc if bc is not None else _blocks().ssd_bc, S)
     pad = (-S) % bc
     if pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
         B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
         C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
-    mode = _mode()
+    mode = registry.dispatch("ssd_scan")
     if mode == "pallas":
         y = _ssd_pallas(x, dt, A, B, C, bc=bc)
     elif mode == "interpret":
@@ -226,6 +423,18 @@ def ssd_scan(x, dt, A, B, C, *, bc: int = 128):
     else:
         y = _xla_ssd(x, dt, A, B, C, bc=bc)
     return y[:, :, :S] if pad else y
+
+
+def _probe_ssd():
+    _ssd_pallas.lower(
+        jnp.zeros((1, 1, 128, 128), jnp.float32),
+        jnp.zeros((1, 1, 128), jnp.float32),
+        jnp.zeros((1,), jnp.float32),
+        jnp.zeros((1, 128, 128), jnp.float32),
+        jnp.zeros((1, 128, 128), jnp.float32), bc=128)
+
+
+_register("ssd_scan", _ssd_pallas, _probe_ssd)
 
 
 def ssd_step(h, x_t, dt_t, A, B_t, C_t):
@@ -260,19 +469,28 @@ def _xla_rglru(a, b):
     return bb.astype(a.dtype)
 
 
-def rglru_scan(a, b, *, bc: int = 256):
+def rglru_scan(a, b, *, bc: Optional[int] = None):
     """a, b: (B, S, W) -> h at every step (B, S, W)."""
-    mode = _mode()
-    if mode == "xla":
+    mode = registry.dispatch("rglru_scan")
+    if mode == "ref":
         return _xla_rglru(a, b)
     S = a.shape[1]
-    bc = min(bc, S)
+    bc = min(bc if bc is not None else _blocks().rglru_bc, S)
     pad = (-S) % bc
     if pad:                      # trailing pad only: earlier steps unaffected
         a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
         b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
     y = _rglru_pallas(a, b, bc=bc, interpret=(mode == "interpret"))
     return y[:, :S] if pad else y
+
+
+def _probe_rglru():
+    _rglru_pallas.lower(
+        jnp.zeros((1, 128, 128), jnp.float32),
+        jnp.zeros((1, 128, 128), jnp.float32), bc=128)
+
+
+_register("rglru_scan", _rglru_pallas, _probe_rglru)
 
 
 def rglru_step(h, a_t, b_t):
@@ -285,11 +503,37 @@ def rglru_step(h, a_t, b_t):
 # weight transform
 # ---------------------------------------------------------------------------
 
-def weight_transform(w, scale=None, *, out_dtype=jnp.bfloat16):
-    """Dequant (int8 + per-col scale) or cast an (n, m) weight extent."""
-    mode = _mode()
+def weight_transform(w, scale=None, *, out_dtype=jnp.bfloat16,
+                     bn: Optional[int] = None, bm: Optional[int] = None):
+    """Dequant (int8 + per-col scale) or cast an (n, m) weight extent.
+
+    Per-shard callers (the decoupler's placement lanes) pass ``bn``/
+    ``bm`` from :func:`repro.configs.shapes.wt_shard_tiles` so small
+    shard slices keep a multi-cell grid; defaults come from the active
+    block profile."""
+    kb = _blocks()
+    bn = bn if bn is not None else kb.wt_bn
+    bm = bm if bm is not None else kb.wt_bm
+    mode = registry.dispatch("weight_transform")
     if mode == "pallas":
-        return _wt_pallas(w, scale, out_dtype=out_dtype)
+        return _wt_pallas(w, scale, out_dtype=out_dtype, bn=bn, bm=bm)
     if mode == "interpret":
-        return _wt_pallas(w, scale, out_dtype=out_dtype, interpret=True)
+        return _wt_pallas(w, scale, out_dtype=out_dtype, bn=bn, bm=bm,
+                          interpret=True)
     return ref.weight_transform(w, scale, out_dtype)
+
+
+def _probe_wt():
+    _wt_pallas.lower(
+        jnp.zeros((128, 128), jnp.int8),
+        jnp.zeros((128,), jnp.float32),
+        out_dtype=jnp.bfloat16, bn=128, bm=128)
+
+
+_register("weight_transform", _wt_pallas, _probe_wt)
+
+
+def wt_shard_blocks(nbytes: int) -> Tuple[int, int]:
+    """(bn, bm) for a per-shard weight_transform of ``nbytes`` — thin
+    re-export so decoupler-side callers need only this module."""
+    return wt_shard_tiles(nbytes)

@@ -17,6 +17,10 @@ parallel device mesh (one byte-range retrieval stream per device, each
 on its own simulated store channel) and serves warm requests from the
 mesh-sharded params.  On CPU the devices are simulated — the flag below
 is set automatically when unset.
+
+``--pallas {auto,pallas,interpret,ref}`` forces the kernel dispatch
+registry for every jitted serving path (default: auto — capability-
+probed per kernel; see :mod:`repro.kernels.ops`).
 """
 from __future__ import annotations
 
@@ -115,6 +119,11 @@ def main(argv=None):
                     help="model-parallel mesh width: stream weights "
                          "shard-granularly onto (1, N) devices and "
                          "serve warm requests sharded (1 = seed path)")
+    ap.add_argument("--pallas", default=None,
+                    choices=["auto", "pallas", "interpret", "ref"],
+                    help="force the kernel dispatch registry for every "
+                         "jitted serving path (default: capability-"
+                         "probed auto; see repro.kernels.ops)")
     ap.add_argument("--bandwidth-mbps", type=float, default=400.0,
                     help="simulated store bandwidth per channel; with "
                          "--mesh N the store exposes N channels (one "
@@ -122,6 +131,10 @@ def main(argv=None):
     ap.add_argument("--store", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.pallas:
+        from repro.kernels import ops
+        ops.set_mode(None if args.pallas == "auto" else args.pallas)
 
     store_dir = args.store or tempfile.mkdtemp(prefix="cicada-store-")
     store = WeightStore(store_dir,

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
 from repro.serving.api import CacheOverflowError, GenerateSpec
 
 PyTree = Any
@@ -152,6 +153,21 @@ class _Active:
         return self.n_prompt + len(self.tokens) - 1
 
 
+@functools.lru_cache(maxsize=16)
+def _prefill_fn(model, fingerprint):
+    """Jitted model.prefill per (model, kernel-dispatch fingerprint).
+
+    The lambda matters: jax's global pjit cache keys on the underlying
+    *function* — ``jax.jit(model.prefill)`` from two schedulers shares
+    one trace, so a scheduler built after a ``REPRO_PALLAS`` change
+    would silently reuse executables that baked the previous kernels
+    in.  A fresh closure per cache entry gives each (model, modes) pair
+    its own trace while still sharing it across schedulers of the same
+    model (scale-out)."""
+    return jax.jit(lambda params, batch, cache:
+                   model.prefill(params, batch, cache))
+
+
 class DecodeScheduler:
     """Continuous-batching decode over one slotted KV cache.
 
@@ -160,6 +176,14 @@ class DecodeScheduler:
     bounds concurrent residency (the honored successor of the old
     server's dead ``max_batch`` knob) — an (n_slots+1)-th caller blocks
     until a slot frees, which continuous batching makes soon and often.
+
+    The jitted prefill and decode step trace the model's attention
+    through the kernel registry (:mod:`repro.kernels.ops`): on a TPU
+    backend serving runs the ``flash_attention`` / ``decode_attention``
+    Pallas kernels the tests verify; elsewhere the probed fallback (or
+    the ``REPRO_PALLAS``/``--pallas`` forced mode) is baked in at trace
+    time — :attr:`kernel_modes` records the resolution this scheduler
+    was built under.
     """
 
     def __init__(self, model, params: PyTree, *, n_slots: int = 8,
@@ -183,7 +207,12 @@ class DecodeScheduler:
         self._slots: Dict[int, _Active] = {}
         self._pending: deque = deque()
         self._stepping = False
-        self._prefill = jax.jit(model.prefill)
+        # the dispatch fingerprint this scheduler's jitted prefill/step
+        # bake in (cheap: no capability probes)
+        self._fingerprint = ops.registry.fingerprint()
+        self._prefill = _prefill_fn(model, self._fingerprint)
+        # bound to THIS instance -> its own pjit cache entry, traced
+        # under the current registry resolution
         self._step = jax.jit(self._step_impl)
         self._join_cache = jax.jit(self._join_cache_impl)
         # counters
@@ -250,6 +279,16 @@ class DecodeScheduler:
         if req.error is not None:
             raise req.error
         return GenResult(req.tokens, req.times, n_prompt)
+
+    @property
+    def kernel_modes(self) -> Dict[str, str]:
+        """Resolved kernel-registry dispatch per op as of this
+        scheduler's construction (what its jitted prefill/step bake in
+        — set the mode BEFORE building schedulers); exact even after a
+        later ``set_mode``.  Resolved lazily: in auto mode this
+        triggers the one-time capability probes, which must not run in
+        __init__ on the cold-start first-token path."""
+        return ops.registry.modes_for(self._fingerprint)
 
     def stats(self) -> Dict[str, int]:
         with self._cv:
@@ -356,13 +395,17 @@ class DecodeScheduler:
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=8)
-def _ref_fns(model):
-    """Per-model jitted prefill/decode_step, cached so repeated
-    reference calls (the bench's serial baseline) don't recompile.
-    Bounded: the jitted closures pin the model and its executables, so
-    an unbounded cache would leak one model per entry for the process
-    lifetime."""
-    return jax.jit(model.prefill), jax.jit(model.decode_step)
+def _ref_fns(model, fingerprint):
+    """Per-(model, kernel-dispatch) jitted prefill/decode_step, cached
+    so repeated reference calls (the bench's serial baseline) don't
+    recompile.  Keyed on the registry fingerprint — and wrapped in
+    per-entry closures, since the global pjit cache keys on the
+    underlying function: ``jax.jit(model.prefill)`` would reuse a
+    trace from a previous dispatch mode.  Bounded: the jitted closures
+    pin the model and its executables, so an unbounded cache would
+    leak one model per entry for the process lifetime."""
+    return (jax.jit(lambda p, b, c: model.prefill(p, b, c)),
+            jax.jit(lambda p, c, t, s: model.decode_step(p, c, t, s)))
 
 
 def reference_generate(model, params: PyTree, prompt, *, n_new: int,
@@ -379,7 +422,7 @@ def reference_generate(model, params: PyTree, prompt, *, n_new: int,
     S = int(prompt.shape[1])
     n_new = validate_spec(spec, S, cache_len)
 
-    prefill, dec = _ref_fns(model)
+    prefill, dec = _ref_fns(model, ops.registry.fingerprint())
     cache = model.init_cache(1, cache_len)
     logits, cache = prefill(params, {"tokens": prompt}, cache)
     out = [sample_first(logits, spec, S)]

@@ -284,12 +284,20 @@ class WeightStore:
     def leaf_slice_nbytes(self, model_name: str, unit: str, leaf: str,
                           index: Optional[Tuple[Any, ...]]) -> int:
         """Bytes a shard stream will read for ``leaf[index]`` (whole
-        payload when index is None — replicated / quantized leaves)."""
+        payload when index is None — replicated leaves).  int8-quantized
+        leaves charge their value slice (1 byte/elem) plus the scale
+        slice of the columns the shard owns."""
         rec = self._leaf_rec(model_name, unit, leaf)
-        if index is None or rec.get("quant") == "int8":
+        if index is None:
             return rec["nbytes"]
+        shape = tuple(rec["shape"])
+        if rec.get("quant") == "int8":
+            vals = sum(n for _, n in slice_byte_runs(shape, 1, index))
+            lo = 0 if index[-1].start is None else int(index[-1].start)
+            hi = shape[-1] if index[-1].stop is None else int(index[-1].stop)
+            return vals + (hi - lo) * 4                  # f32 scales
         return sum(n for _, n in slice_byte_runs(
-            tuple(rec["shape"]), np.dtype(rec["dtype"]).itemsize, index))
+            shape, np.dtype(rec["dtype"]).itemsize, index))
 
     def read_leaf_slice(self, model_name: str, unit: str, leaf: str,
                         index: Optional[Tuple[Any, ...]], *,
@@ -302,12 +310,16 @@ class WeightStore:
         """Byte-range read of one leaf's shard: ``leaf[index]`` only —
         the unit of retrieval under shard-granular cold starts.
 
-        index None (or an int8-quantized leaf, whose payload interleaves
-        values and scales) reads the whole payload; otherwise only the
-        contiguous runs covering the slice are read.  Returns
-        ``(array, scale_or_None)`` like :meth:`deserialize` does per
-        leaf.  Slice reads skip the whole-payload crc (a shard never
-        materializes the full extent); whole reads still verify.
+        index None reads the whole payload; otherwise only the
+        contiguous runs covering the slice are read.  For an
+        int8-quantized leaf a sliced read gathers the value bytes of
+        ``leaf[index]`` (the payload's int8 region viewed at the leaf's
+        *logical* shape) plus the f32 scale entries of the columns the
+        slice covers — the per-shard inputs of the ``weight_transform``
+        apply stage.  Returns ``(array, scale_or_None)`` like
+        :meth:`deserialize` does per leaf.  Slice reads skip the
+        whole-payload crc (a shard never materializes the full extent);
+        whole reads still verify.
 
         ``fh``: optional already-open unit file (one ``on_open`` per
         shard stream instead of per leaf).
@@ -329,7 +341,7 @@ class WeightStore:
             fh = open(self._unit_path(model_name, unit), "rb")
             close = True
         try:
-            if index is None or rec.get("quant") == "int8":
+            if index is None:
                 payload = self._read_runs(
                     fh, [(rec["offset"], rec["nbytes"])], chunk_bytes,
                     gate, on_chunk, channel)
@@ -344,27 +356,39 @@ class WeightStore:
             # (shard streams run ~device-count-x concurrently).  Only
             # the slice's bytes are charged to the simulated device.
             shape = tuple(rec["shape"])
-            dt = np.dtype(rec["dtype"])
+            quant = rec.get("quant") == "int8"
+            dt = np.dtype(np.int8) if quant else np.dtype(rec["dtype"])
+            sn = rec.get("scale_nbytes", 0) if quant else 0
             mm = np.memmap(fh, dtype=np.uint8, mode="r")
-            view = mm[rec["offset"]:rec["offset"] + rec["nbytes"]] \
+            view = mm[rec["offset"]:rec["offset"] + rec["nbytes"] - sn] \
                 .view(dt).reshape(shape)
             arr = view[tuple(index)]
+            scale = None
+            if quant:             # f32 scales of the slice's columns
+                lo = 0 if index[-1].start is None else int(index[-1].start)
+                hi = shape[-1] if index[-1].stop is None \
+                    else int(index[-1].stop)
+                scale = np.array(
+                    mm[rec["offset"] + rec["nbytes"] - sn:
+                       rec["offset"] + rec["nbytes"]]
+                    .view(np.float32)[lo:hi])
             if out is not None:
                 np.copyto(out, arr)
                 arr = out
             elif materialize:
                 arr = np.ascontiguousarray(arr)
             del view, mm
+            total = arr.nbytes + (scale.nbytes if scale is not None else 0)
             done = 0
-            while done < arr.nbytes:          # simulated transfer cost
+            while done < total:               # simulated transfer cost
                 if gate is not None:
                     gate.wait()
-                n = min(chunk_bytes, arr.nbytes - done)
+                n = min(chunk_bytes, total - done)
                 self.device.on_chunk(n, channel)
                 done += n
                 if on_chunk is not None:
                     on_chunk(n)
-            return arr, None
+            return arr, scale
         finally:
             if close:
                 fh.close()

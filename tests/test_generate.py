@@ -340,3 +340,55 @@ def test_unknown_model_typed_error_on_submitting_thread():
         with pytest.raises(UnknownModelError):
             router.submit(Request(req_id=1, model="nope",
                                   gen=GenerateSpec(prompt=[1, 2, 3])))
+
+
+# ---------------------------------------------------------------------------
+# kernel-registry wiring: serving exercises the Pallas kernel bodies
+# ---------------------------------------------------------------------------
+
+def test_scheduler_runs_interpret_kernels_bit_identical(dense, monkeypatch):
+    """Under REPRO_PALLAS=interpret the DecodeScheduler's jitted
+    prefill/step dispatch the *Pallas kernel bodies* (interpret mode) —
+    the registry records the dispatches — and the token stream stays
+    bit-identical to the serial reference traced under the same mode."""
+    from repro.kernels import ops
+
+    cfg, m, params = dense
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    before = dict(ops.registry.dispatch_counts)
+    sched = DecodeScheduler(m, params, n_slots=2, cache_len=CACHE_LEN)
+    assert sched.kernel_modes["flash_attention"] == "interpret"
+    assert sched.kernel_modes["decode_attention"] == "interpret"
+    spec = GenerateSpec(prompt=_prompt(cfg, 5), n_new=4)
+    got = sched.generate(spec).tokens
+    want = reference_generate(m, params, spec.prompt, n_new=4,
+                              cache_len=CACHE_LEN)
+    assert got == want
+    for kern in ("flash_attention", "decode_attention"):
+        assert ops.registry.dispatch_counts.get((kern, "interpret"), 0) > \
+            before.get((kern, "interpret"), 0), kern
+
+
+def test_registry_auto_probes_and_forces(monkeypatch):
+    """auto resolves through the cached capability probe (ref on CPU);
+    set_mode overrides the env var; bogus modes fail loudly."""
+    from repro.kernels import ops
+
+    monkeypatch.delenv("REPRO_PALLAS", raising=False)
+    desc = ops.registry.describe()
+    assert set(desc) == {"flash_attention", "decode_attention",
+                         "ssd_scan", "rglru_scan", "weight_transform"}
+    if jax.default_backend() != "tpu":
+        assert all(not d["pallas_supported"] for d in desc.values())
+        assert all(d["mode"] == "ref" for d in desc.values())
+    monkeypatch.setenv("REPRO_PALLAS", "xla")       # legacy alias
+    assert ops.registry.mode("flash_attention") == "ref"
+    ops.set_mode("interpret")                       # flag beats env
+    try:
+        assert ops.registry.mode("flash_attention") == "interpret"
+        assert ops.registry.fingerprint()[0] == "interpret"
+        assert ops.registry.modes()["flash_attention"] == "interpret"
+    finally:
+        ops.set_mode(None)
+    with pytest.raises(ValueError, match="must be one of"):
+        ops.set_mode("vulkan")

@@ -287,3 +287,109 @@ def test_fused_strategy_places_params_on_mesh(tmp_path):
         not getattr(l.sharding, "is_fully_replicated", True)
         for l in jax.tree.leaves(res.params))
     assert anysharded
+
+
+# ---------------------------------------------------------------------------
+# int8 shard streaming: dequant/cast leaves get shard plans too (PR 5)
+# ---------------------------------------------------------------------------
+
+def _deploy_int8(tmp_path, name="q8"):
+    """An int8-quantized deployment whose sharded leaves clear the
+    RUN_FLOOR at 1 byte/element: d_ff/4 = 1024-byte column runs.  The
+    attention projections (n_heads=3 on a 4-way mesh) replicate — the
+    *replication* fallback, which is orthogonal to quantization."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("smollm-360m", smoke=True),
+                              name=name, d_ff=4096, vocab_size=4096)
+    model = transformer.build(cfg)
+    store = CountingStore(str(tmp_path))
+    deploy_model(store, model, name, jax.random.key(11), quant="int8")
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 16)),
+        jnp.int32)}
+    return cfg, model, store, batch
+
+
+@needs_mesh
+def test_int8_leaves_get_ranged_shard_plans(tmp_path):
+    """No whole-leaf fallback for dequant leaves: every quantized leaf
+    whose resolved spec is sharded streams byte-range pieces (values +
+    per-column scale slices), and its device buffers commit in the
+    transformed dtype."""
+    cfg, model, store, batch = _deploy_int8(tmp_path)
+    mesh = make_serving_mesh((1, 4))
+    plan = plan_unit(store, "q8", "block_000",
+                     model.abstract_unit("block_000"), mesh, _serve_rules())
+    saw_sharded_quant = 0
+    for leaf, sharding in plan.specs.items():
+        if not plan.quant[leaf]:
+            continue
+        assert plan.transformed[leaf] and plan.out_dtype[leaf] is not None
+        pieces = [p for sh in plan.pieces for p in sh if p.leaf == leaf]
+        if all(ax is None for ax in tuple(sharding.spec)):
+            continue                     # replication fallback (n_heads=3)
+        saw_sharded_quant += 1
+        assert pieces and all(p.index is not None for p in pieces), leaf
+        # the scale bytes ride along in the stream's cost model
+        for p in pieces:
+            idx = p.index
+            lo = 0 if idx[-1].start is None else idx[-1].start
+            hi = plan.shapes[leaf][-1] if idx[-1].stop is None \
+                else idx[-1].stop
+            assert p.nbytes >= (hi - lo) * 4
+    assert saw_sharded_quant >= 3            # mlp wg/wu/wd at least
+
+
+@needs_mesh
+@pytest.mark.parametrize("width", [2, 4])
+def test_int8_sharded_bit_identical_to_whole_read(tmp_path, width):
+    """A quantized-leaf cold start on a mesh of {2, 4} devices streams
+    shards (per-shard dequant on the placement lanes) and produces
+    logits AND assembled params bit-identical to the whole-read dequant
+    path; mesh=1 is covered by the degenerate-normalization test."""
+    cfg, model, store, batch = _deploy_int8(tmp_path)
+    ref = _engine(model, store, batch, name="q8").load(batch)
+
+    mesh = make_serving_mesh((1, width))
+    store.reset()
+    res = _engine(model, store, batch, mesh=mesh, name="q8").load(batch)
+    assert store.unit_reads == 0             # no whole-unit fallback reads
+    assert store.shard_opens == len(model.unit_names()) * width
+
+    assert np.asarray(res.logits).tobytes() == \
+        np.asarray(ref.logits).tobytes()
+    flat_r = jax.tree_util.tree_flatten_with_path(ref.params)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(res.params)[0]
+    assert len(flat_r) == len(flat_s)
+    for (p1, l1), (p2, l2) in zip(flat_r, flat_s):
+        assert np.array_equal(np.asarray(l1), np.asarray(l2)), p1
+    assert any(not getattr(l.sharding, "is_fully_replicated", True)
+               for _, l in flat_s)
+
+
+@needs_mesh
+def test_int8_second_cold_start_zero_read_per_shard(tmp_path):
+    """With the shared WeightCache, the second quantized cold start is
+    served entirely from cached shard payloads (raw int8 values + scale
+    slices): zero additional store opens, identical logits."""
+    cfg, model, store, batch = _deploy_int8(tmp_path)
+    mesh = make_serving_mesh((1, 4))
+    cache = WeightCache(None)
+    n_units = len(model.unit_names())
+
+    store.reset()
+    r1 = _engine(model, store, batch, mesh=mesh, cache=cache,
+                 name="q8").load(batch)
+    assert store.shard_opens == n_units * 4
+    assert store.unit_reads == 0
+
+    r2 = _engine(model, store, batch, mesh=mesh, cache=cache,
+                 name="q8").load(batch)
+    assert store.shard_opens == n_units * 4      # zero-read per shard
+    st = cache.stats()
+    assert st.misses == n_units * 4 and st.hits == n_units * 4
+    assert np.asarray(r2.logits).tobytes() == \
+        np.asarray(r1.logits).tobytes()
+    R = [e for e in r2.trace.events if e.stage == "R"]
+    assert R and all(e.meta and e.meta.get("cached") for e in R)
+    assert cache.stats().pinned == 0
