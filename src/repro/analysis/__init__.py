@@ -1,0 +1,17 @@
+"""Concurrency correctness toolkit for the repro tree.
+
+Two sides share one vocabulary of lock node names ("Class._lock"):
+
+* :mod:`repro.analysis.lint` — AST rules R1–R5 (guarded-by, cv-wait
+  discipline, static lock-order cycles, no-sleep, jit-cache hygiene).
+* :mod:`repro.analysis.locks` — the opt-in instrumented Lock / RLock /
+  Condition factory (``REPRO_ANALYZE=1``) every repro module uses, plus
+  the process-wide :data:`~repro.analysis.locks.probe`.
+
+``python -m repro.analysis {lint,lockgraph,report}`` is the CLI.
+"""
+from .locks import (enabled, make_condition, make_lock, make_rlock,
+                    note_io, probe)
+
+__all__ = ["enabled", "make_lock", "make_rlock", "make_condition",
+           "note_io", "probe"]

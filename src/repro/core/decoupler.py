@@ -49,6 +49,7 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
+from repro import analysis
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import PriorityAwareScheduler
 from repro.core.shards import ShardedUnitData, UnitShardPlan
@@ -98,16 +99,18 @@ class WeightDecoupler:
         self._pool: Optional[ThreadPoolExecutor] = None
         self._committer: Optional[ThreadPoolExecutor] = None
         self._admit: Dict[str, threading.Event] = {}
-        self._unadmitted: List[str] = []
-        self._reads_left: Dict[str, int] = {}
-        # unit -> Leaves (unit-granular) | ShardedUnitData (complete)
-        self.ready: Dict[str, Any] = {}
         self.state = state
-        self.cv = state.cv if state is not None else threading.Condition()
-        self.errors: List[BaseException] = []
-        self._pinned: set = set()        # (unit, shard-key) cache refs
+        self.cv = state.cv if state is not None \
+            else analysis.make_condition("WeightDecoupler.cv")
+        self._unadmitted: List[str] = []              # guarded-by: cv
+        self._reads_left: Dict[str, int] = {}         # guarded-by: cv
+        # unit -> Leaves (unit-granular) | ShardedUnitData (complete)
+        self.ready: Dict[str, Any] = {}               # guarded-by: cv
+        self.errors: List[BaseException] = []         # guarded-by: cv
+        # (unit, shard-key) cache refs
+        self._pinned: set = set()                     # guarded-by: cv
         self._load_registered = False
-        self._closed = False
+        self._closed = False                          # guarded-by: cv
 
     # ------------------------------------------------------ async retrieval
     def prefetch(self, units: List[str]):
@@ -134,21 +137,23 @@ class WeightDecoupler:
         # pipeline to construct/apply/execute against (the seed's
         # bounded I/O pool enforced this ordering implicitly).
         self._admit = {u: threading.Event() for u in units}
-        self._unadmitted = list(units)
-        self._reads_left = {}
+        # pre-thread initialization: the stream workers that share cv
+        # are submitted only at the end of this method
+        self._unadmitted = list(units)      # analysis: ignore[R1]
+        self._reads_left = {}               # analysis: ignore[R1]
         for u in units:
             plan = self.plan_fn(u)
             self._plans[u] = plan
             data = ShardedUnitData(plan)
             if self._mesh_tag is None:
                 self._mesh_tag = plan.tag
-            self._reads_left[u] = plan.n_shards
+            self._reads_left[u] = plan.n_shards     # analysis: ignore[R1]
             for s in range(plan.n_shards):
                 st = self.scheduler.register(u, plan.shard_nbytes(s),
                                              shard=s)
                 streams.append((u, s, st, data))
         for _ in range(min(self.io_workers, len(units))):
-            self._admit[self._unadmitted.pop(0)].set()
+            self._admit[self._unadmitted.pop(0)].set()  # analysis: ignore[R1]
         self._pool = ThreadPoolExecutor(
             max_workers=max(self.io_workers, len(streams)),
             thread_name_prefix="cicada-io")
@@ -230,8 +235,9 @@ class WeightDecoupler:
                      data: ShardedUnitData):
         try:
             self._admit[unit].wait()        # unit-ordered channel window
-            if self._closed:                # released by shutdown
-                return
+            with self.cv:
+                if self._closed:            # released by shutdown
+                    return
             self.scheduler.on_issue(unit, shard=shard)
             with self.cv:
                 self.cv.notify_all()
@@ -367,7 +373,13 @@ class WeightDecoupler:
     # it needs construction state too, and shares this decoupler's CV.)
 
     def shutdown(self):
-        self._closed = True
+        with self.cv:
+            # _closed flips under cv so a shard worker passing its
+            # admission gate observes it or the pin sweep sees its pin
+            # — never neither (the old unlocked write raced _pin)
+            self._closed = True
+            pinned, self._pinned = self._pinned, set()
+            self.cv.notify_all()
         for ev in self._admit.values():     # release admission waiters
             ev.set()
         if self._pool is not None:
@@ -375,9 +387,6 @@ class WeightDecoupler:
         if self._committer is not None:
             self._committer.shutdown(wait=False)
         if self.cache is not None:
-            with self.cv:
-                self._closed = True
-                pinned, self._pinned = self._pinned, set()
             for u, k in pinned:              # pins left by an aborted load
                 self.cache.release(self.model_name, u, k)
             if self._load_registered:

@@ -17,9 +17,10 @@ execution.  Thread-safe; timestamps are ``time.monotonic()``.
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro import analysis
 
 STAGE_ROW = {"L": "Layer", "R": "Retrieve", "A": "Weight", "E": "Compute"}
 PRED = {"A": "L", "E": "A"}       # waiting-time predecessor (paper Sec IV-C)
@@ -44,12 +45,14 @@ class StageEvent:
 
 class PipelineTrace:
     def __init__(self):
-        self.events: List[StageEvent] = []
-        self._lock = threading.Lock()
+        self._lock = analysis.make_lock("PipelineTrace._lock")
+        # append-only while pipeline threads run; queries read after
+        # the join, so only writes need the lock
+        self.events: List[StageEvent] = []    # guarded-by[writes]: _lock
         self.t0: Optional[float] = None
         self.t_end: Optional[float] = None
-        self.memory: List[Tuple[str, int, float, float]] = []
         # (layer, placeholder_bytes, t_construct_end, t_apply_end)
+        self.memory: List[Tuple[str, int, float, float]] = []  # guarded-by[writes]: _lock
 
     # ------------------------------------------------------------- recording
     def start(self):

@@ -32,6 +32,8 @@ import threading
 import time
 from typing import Dict, Hashable, Optional, Tuple
 
+from repro import analysis
+
 HIGH = "HIGH"
 NORMAL = "NORMAL"
 
@@ -57,12 +59,15 @@ class PriorityAwareScheduler:
     def __init__(self, *, bw_bytes_per_s: float = 1e9,
                  a_overhead_s: float = 1e-3, enabled: bool = True):
         self.enabled = enabled
-        self._streams: Dict[Tuple[str, Hashable], StreamState] = {}
-        self._lock = threading.Lock()
-        self._bw = bw_bytes_per_s          # EMA of observed bandwidth
+        self._lock = analysis.make_lock("PriorityAwareScheduler._lock")
+        self._streams: Dict[Tuple[str, Hashable], StreamState] = {}  # guarded-by: _lock
+        # EMA of observed bandwidth
+        self._bw = bw_bytes_per_s                 # guarded-by: _lock
         self._a = a_overhead_s
-        self._critical: Optional[str] = None      # unit being prioritized
-        self.suspend_count = 0             # observability / tests
+        # unit being prioritized
+        self._critical: Optional[str] = None      # guarded-by: _lock
+        # observability / tests
+        self.suspend_count = 0                    # guarded-by: _lock
 
     # ------------------------------------------------------------- streams
     def register(self, unit: str, nbytes: int, shard: Hashable = 0
@@ -197,7 +202,10 @@ class PriorityAwareScheduler:
 
     # --------------------------------------------------------------- lookup
     def gate(self, unit: str, shard: Hashable = 0) -> threading.Event:
-        return self._streams[(unit, shard)].gate
+        # R1 (real finding): this read raced register()'s dict insert
+        # from concurrent shard streams before it took the lock
+        with self._lock:
+            return self._streams[(unit, shard)].gate
 
     def stats(self) -> dict:
         with self._lock:

@@ -41,13 +41,13 @@ whole by exactly one stream, round-robined across shards for balance.
 from __future__ import annotations
 
 import dataclasses
-import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import analysis
 from repro.distributed.sharding import ShardingRules, leaf_specs
 from repro.kernels import ops
 from repro.store.store import slice_byte_runs
@@ -212,18 +212,18 @@ class ShardedUnitData:
 
     def __init__(self, plan: UnitShardPlan):
         self.plan = plan
-        self._lock = threading.Lock()
-        self._host: Dict[str, np.ndarray] = {}
+        self._lock = analysis.make_lock("ShardedUnitData._lock")
+        self._host: Dict[str, np.ndarray] = {}        # guarded-by: _lock
         # transformed leaves also merge their *dequantized/cast* shard
         # outputs host-side, so the compute prefetch reuses the work the
         # placement lanes already did instead of re-transforming the
         # full leaf (the transform is elementwise: merged slices ==
         # whole-leaf transform, bit for bit)
-        self._host_t: Dict[str, np.ndarray] = {}
-        self._scales: Dict[str, Optional[np.ndarray]] = {}
-        self._bufs: Dict[Tuple[str, int], jax.Array] = {}
-        self._compute: Optional[Dict[str, jax.Array]] = None
-        self._arrived = 0
+        self._host_t: Dict[str, np.ndarray] = {}      # guarded-by: _lock
+        self._scales: Dict[str, Optional[np.ndarray]] = {}  # guarded-by: _lock
+        self._bufs: Dict[Tuple[str, int], jax.Array] = {}   # guarded-by: _lock
+        self._compute: Optional[Dict[str, jax.Array]] = None  # guarded-by: _lock
+        self._arrived = 0                             # guarded-by: _lock
 
     def _host_alloc_locked(self, leaf: str) -> np.ndarray:
         full = self._host.get(leaf)
@@ -350,13 +350,17 @@ class ShardedUnitData:
             # Transformed leaves ship the merged per-shard
             # weight_transform outputs — the dequant/cast compute phase
             # already ran on the placement lanes, so A just waits
-            names = [leaf for leaf in self._host
-                     if not plan.transformed[leaf]]
-            srcs = [self._host[n] for n in names] + \
-                [self._host_t[n] for n in self._host_t]
-            bufs = jax.device_put(srcs)
-            self._compute = dict(zip(list(names) + list(self._host_t),
-                                     bufs))
+            with self._lock:
+                names = [leaf for leaf in self._host
+                         if not plan.transformed[leaf]]
+                srcs = [self._host[n] for n in names] + \
+                    [self._host_t[n] for n in self._host_t]
+                t_names = list(self._host_t)
+            bufs = jax.device_put(srcs)                 # async; outside lock
+            with self._lock:
+                # R1 (real finding): this publish raced the compute_bufs
+                # reader before it moved under the lock
+                self._compute = dict(zip(names + t_names, bufs))
         return last
 
     @property
@@ -382,14 +386,16 @@ class ShardedUnitData:
         by the last shard's commit).  Covers every leaf: transformed
         ones ship their merged per-shard ``weight_transform`` outputs,
         so the weight unit's A never recomputes the apply phase."""
-        return self._compute or {}
+        with self._lock:
+            return self._compute or {}
 
     def global_array(self, leaf: str) -> jax.Array:
         """Stitch the eagerly-committed per-device buffers into the
         leaf's global sharded array (metadata only — no transfer)."""
         sharding = self.plan.specs[leaf]
         shape = self.plan.shapes[leaf]
-        bufs = [self._bufs[(leaf, d.id)]
-                for d in sharding.devices_indices_map(shape)]
+        with self._lock:
+            bufs = [self._bufs[(leaf, d.id)]
+                    for d in sharding.devices_indices_map(shape)]
         return jax.make_array_from_single_device_arrays(
             shape, sharding, bufs)

@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 
+from repro import analysis
 from repro.core import miniloader
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import PriorityAwareScheduler
@@ -62,9 +63,10 @@ class PipelineState:
     """
 
     def __init__(self, cv: Optional[threading.Condition] = None):
-        self.cv = cv if cv is not None else threading.Condition()
-        self._slots: Dict[str, Dict[str, Any]] = {}
-        self.errors: List[BaseException] = []
+        self.cv = cv if cv is not None \
+            else analysis.make_condition("PipelineState.cv")
+        self._slots: Dict[str, Dict[str, Any]] = {}   # guarded-by: cv
+        self.errors: List[BaseException] = []         # guarded-by: cv
 
     # ------------------------------------------------------------ producers
     def publish(self, stage: str, unit: str, value: Any = True):

@@ -39,12 +39,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import analysis
 from repro.configs.shapes import kernel_blocks, wt_shard_tiles
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
@@ -76,14 +76,14 @@ class KernelRegistry:
 
     def __init__(self):
         self._kernels: Dict[str, KernelSpec] = {}
-        self._verdicts: Dict[str, bool] = {}
-        self._probe_errors: Dict[str, str] = {}
+        self._lock = analysis.make_lock("KernelRegistry._lock")
+        self._verdicts: Dict[str, bool] = {}        # guarded-by: _lock
+        self._probe_errors: Dict[str, str] = {}     # guarded-by: _lock
         self._forced: Optional[str] = None
-        self._lock = threading.Lock()
         # (kernel, mode) -> trace-time dispatch count: observability
         # that a given path (e.g. the serving engine's jitted step)
         # actually routed through a kernel, and in which mode
-        self.dispatch_counts: Dict[Tuple[str, str], int] = {}
+        self.dispatch_counts: Dict[Tuple[str, str], int] = {}  # guarded-by: _lock
 
     def register(self, spec: KernelSpec):
         self._kernels[spec.name] = spec
@@ -163,6 +163,13 @@ class KernelRegistry:
                     for n in self._kernels}
         return {n: mode for n in self._kernels}
 
+    def dispatch_snapshot(self) -> Dict[Tuple[str, str], int]:
+        """Consistent copy of :attr:`dispatch_counts` — the only
+        sanctioned way to read it while op wrappers may be tracing on
+        other threads."""
+        with self._lock:
+            return dict(self.dispatch_counts)
+
     def describe(self) -> Dict[str, Dict[str, Any]]:
         """Per-kernel dispatch report (benchmarks / `stats()` surface)."""
         out = {}
@@ -170,8 +177,10 @@ class KernelRegistry:
             m = self.mode(n)
             out[n] = {"mode": m,
                       "pallas_supported": self.pallas_supported(n)}
-            if n in self._probe_errors:
-                out[n]["probe_error"] = self._probe_errors[n]
+            with self._lock:
+                err = self._probe_errors.get(n)
+            if err is not None:
+                out[n]["probe_error"] = err
         return out
 
 

@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import threading
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -38,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import analysis
 from repro.kernels import ops
 from repro.serving.api import CacheOverflowError, GenerateSpec
 
@@ -196,25 +196,31 @@ class DecodeScheduler:
         self.params = params
         self.n_slots = int(n_slots)
         self.cache_len = int(cache_len)
-        self._cache = model.init_cache(self.n_slots, self.cache_len)
+        self._cache = model.init_cache(self.n_slots, self.cache_len)  # guarded-by: _cv
         # host-side per-slot step inputs
-        self._tok = np.zeros((self.n_slots, 1), np.int32)
-        self._pos = np.zeros((self.n_slots,), np.int32)
-        self._seed = np.zeros((self.n_slots,), np.uint32)
-        self._temp = np.zeros((self.n_slots,), np.float32)
-        self._cv = threading.Condition()
-        self._free: List[int] = list(range(self.n_slots))
-        self._slots: Dict[int, _Active] = {}
-        self._pending: deque = deque()
-        self._stepping = False
+        self._tok = np.zeros((self.n_slots, 1), np.int32)    # guarded-by: _cv
+        self._pos = np.zeros((self.n_slots,), np.int32)      # guarded-by: _cv
+        self._seed = np.zeros((self.n_slots,), np.uint32)    # guarded-by: _cv
+        self._temp = np.zeros((self.n_slots,), np.float32)   # guarded-by: _cv
+        self._cv = analysis.make_condition("DecodeScheduler._cv")
+        self._free: List[int] = list(range(self.n_slots))  # guarded-by: _cv
+        self._slots: Dict[int, _Active] = {}               # guarded-by: _cv
+        self._pending: deque = deque()                     # guarded-by: _cv
+        self._stepping = False                             # guarded-by: _cv
         # the dispatch fingerprint this scheduler's jitted prefill/step
         # bake in (cheap: no capability probes)
         self._fingerprint = ops.registry.fingerprint()
         self._prefill = _prefill_fn(model, self._fingerprint)
-        # bound to THIS instance -> its own pjit cache entry, traced
-        # under the current registry resolution
-        self._step = jax.jit(self._step_impl)
-        self._join_cache = jax.jit(self._join_cache_impl)
+        # per-instance lambda closures -> each scheduler owns its pjit
+        # cache entry, traced under the current registry resolution
+        # (never a bound method: those share jax's global cache by
+        # (__func__, __self__) equality — R5)
+        self._step = jax.jit(
+            lambda p, c, tok, pos, seed, temp:
+            self._step_impl(p, c, tok, pos, seed, temp))
+        self._join_cache = jax.jit(
+            lambda cache, one, slot:
+            self._join_cache_impl(cache, one, slot))
         # counters
         self.steps = 0
         self.max_occupancy = 0

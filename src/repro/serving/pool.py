@@ -31,13 +31,13 @@ model function and hands them out under two disciplines:
 """
 from __future__ import annotations
 
-import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import analysis
 from repro.core.coldstart import ColdStartEngine, LoadResult
 from repro.serving.api import GenerateSpec, PoolStats
 from repro.serving.decode import (DecodeScheduler, GenResult, sample_first,
@@ -94,7 +94,8 @@ class FunctionInstance:
         self.scheduler: Optional[DecodeScheduler] = None
         # guards scheduler creation: warm generation joiners are NOT
         # serialized by the pool (shared holds), so two may race here
-        self._sched_lock = threading.Lock()
+        self._sched_lock = analysis.make_lock(
+            "FunctionInstance._sched_lock")
         self._fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
         if warm and example_batch is not None:
             self.engine.warmup(example_batch)
@@ -233,19 +234,23 @@ class InstancePool:
         self._io_workers = io_workers
         self._chunk_bytes = chunk_bytes
         self._factory = instance_factory or self._default_factory
-        self._cv = threading.Condition()
-        self._instances: List[Any] = []
-        self._idle: List[Any] = []
-        self._busy: List[Any] = []
-        self._creating = 0
-        self._last_used: Dict[int, float] = {}     # id(inst) -> logical t
-        self._gen_count: Dict[int, int] = {}       # id(inst) -> joined gens
-        self._gen_cold: set = set()                # ids mid cold load
-        self._excl_waiters = 0                     # acquire() calls in wait
-        self._excl_starved_until = 0.0             # sticky join pause
-        self._cold_starts = 0
-        self._warm_hits = 0
-        self._evictions = 0
+        self._cv = analysis.make_condition("InstancePool._cv")
+        self._instances: List[Any] = []            # guarded-by: _cv
+        self._idle: List[Any] = []                 # guarded-by: _cv
+        self._busy: List[Any] = []                 # guarded-by: _cv
+        self._creating = 0                         # guarded-by: _cv
+        # id(inst) -> logical t
+        self._last_used: Dict[int, float] = {}     # guarded-by: _cv
+        # id(inst) -> joined gens
+        self._gen_count: Dict[int, int] = {}       # guarded-by: _cv
+        self._gen_cold: set = set()                # guarded-by: _cv
+        # acquire() calls in wait
+        self._excl_waiters = 0                     # guarded-by: _cv
+        # sticky join pause
+        self._excl_starved_until = 0.0             # guarded-by: _cv
+        self._cold_starts = 0                      # guarded-by: _cv
+        self._warm_hits = 0                        # guarded-by: _cv
+        self._evictions = 0                        # guarded-by: _cv
 
     def _default_factory(self):
         model, example = self._builder()
@@ -276,7 +281,7 @@ class InstancePool:
         with self._cv:
             while True:
                 if logical_now is not None:
-                    self._evict_expired(logical_now)
+                    self._evict_expired_locked(logical_now)
                 inst = next((i for i in self._idle if i.live), None)
                 if inst is None and self._idle:
                     inst = self._idle[0]
@@ -301,7 +306,7 @@ class InstancePool:
                     raise TimeoutError(
                         f"pool {self.model_name!r} saturated "
                         f"({self.max_instances} instances busy)")
-                # while we wait, _gen_candidate grants no new joins, so
+                # while we wait, _gen_candidate_locked grants no new joins, so
                 # shared generation holds drain instead of starving us
                 self._excl_waiters += 1
                 try:
@@ -311,7 +316,7 @@ class InstancePool:
         return self._provision()
 
     # --------------------------------------------------- shared generation
-    def _gen_candidate(self):
+    def _gen_candidate_locked(self):
         """A live instance a generation request may join right now:
         not mid cold-load, not exclusively held by one-shot work, with
         scheduler slot capacity.  Idle instances preferred (caller
@@ -360,8 +365,8 @@ class InstancePool:
         with self._cv:
             while True:
                 if logical_now is not None:
-                    self._evict_expired(logical_now)
-                inst = self._gen_candidate()
+                    self._evict_expired_locked(logical_now)
+                inst = self._gen_candidate_locked()
                 if inst is not None:
                     gid = id(inst)
                     self._gen_count[gid] = self._gen_count.get(gid, 0) + 1
@@ -468,7 +473,7 @@ class InstancePool:
                 self._warm_hits += 1
             self._cv.notify_all()
 
-    def _evict_expired(self, now: float) -> int:
+    def _evict_expired_locked(self, now: float) -> int:
         """Offer idle live instances to the eviction policy (caller
         holds the lock); returns the number evicted."""
         n = 0
@@ -486,7 +491,7 @@ class InstancePool:
         """Run keep-alive eviction over idle live instances; returns the
         number evicted.  Busy instances are never considered."""
         with self._cv:
-            return self._evict_expired(now)
+            return self._evict_expired_locked(now)
 
     # -------------------------------------------------------------- queries
     def any_live(self) -> bool:

@@ -29,6 +29,7 @@ import numpy as np
 
 from concurrent.futures import InvalidStateError
 
+from repro import analysis
 from repro.serving.api import (AdmissionError, Request, RequestClass,
                                Response, RouterStats, UnknownModelError)
 from repro.serving.pool import InstancePool
@@ -66,11 +67,12 @@ class Router:
         self.acquire_timeout_s = acquire_timeout_s
         self.cache = cache
         self.stats = RouterStats()
-        self._cv = threading.Condition()
-        self._heap: list = []              # (class, seq, Request, Future)
+        self._cv = analysis.make_condition("Router._cv")
+        # (class, seq, Request, Future)
+        self._heap: list = []              # guarded-by: _cv
         self._seq = itertools.count()
-        self._stop = False
-        self._in_flight = 0
+        self._stop = False                 # guarded-by: _cv
+        self._in_flight = 0                # guarded-by: _cv
         self._workers = [threading.Thread(target=self._worker,
                                           name=f"router-worker-{i}",
                                           daemon=True)

@@ -38,9 +38,10 @@ paper's decoupled compute stage).
 from __future__ import annotations
 
 import dataclasses
-import threading
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+from repro import analysis
 
 # begin() outcomes
 HIT = "hit"      # leaves returned, reference taken
@@ -91,16 +92,16 @@ class WeightCache:
         # knob (a literal zero-byte cache would evict every entry on
         # insert — never what a caller wants from "enable the cache")
         self.budget_bytes = budget_bytes or None
-        self._cv = threading.Condition()
-        self._entries: "OrderedDict[Tuple[str, str, Hashable], _Entry]" = \
-            OrderedDict()
-        self._bytes = 0
-        self._inflight: Dict[str, int] = {}      # model -> active loads
-        self._hits = 0
-        self._misses = 0
-        self._waits = 0
-        self._inserts = 0
-        self._evictions = 0
+        self._cv = analysis.make_condition("WeightCache._cv")
+        self._entries: "OrderedDict[Tuple[str, str, Hashable], _Entry]" \
+            = OrderedDict()                      # guarded-by: _cv
+        self._bytes = 0                          # guarded-by: _cv
+        self._inflight: Dict[str, int] = {}      # guarded-by: _cv
+        self._hits = 0                           # guarded-by: _cv
+        self._misses = 0                         # guarded-by: _cv
+        self._waits = 0                          # guarded-by: _cv
+        self._inserts = 0                        # guarded-by: _cv
+        self._evictions = 0                      # guarded-by: _cv
 
     # --------------------------------------------------------- load protocol
     def begin(self, model: str, unit: str, shard: Hashable = 0

@@ -36,6 +36,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import analysis
+
 PyTree = Any
 ALIGN = 64
 
@@ -68,8 +70,8 @@ class BandwidthModel:
     channels: int = 1
 
     def __post_init__(self):
-        self._lock = threading.Lock()
-        self._next_free = [0.0] * max(1, int(self.channels))
+        self._lock = analysis.make_lock("BandwidthModel._lock")
+        self._next_free = [0.0] * max(1, int(self.channels))  # guarded-by: _lock
 
     def on_open(self):
         if self.latency_ms > 0:
@@ -79,8 +81,8 @@ class BandwidthModel:
         if self.bandwidth_mbps <= 0:
             return
         dur = nbytes / (self.bandwidth_mbps * 1e6)
-        ch = channel % len(self._next_free)
         with self._lock:
+            ch = channel % len(self._next_free)
             now = time.monotonic()
             start = max(now, self._next_free[ch])
             self._next_free[ch] = start + dur
@@ -260,6 +262,7 @@ class WeightStore:
         """
         path = self._unit_path(model_name, unit)
         total = os.path.getsize(path)
+        analysis.note_io("read_unit")   # flags lock-held-across-I/O
         self.device.on_open()
         out = bytearray()
         with open(path, "rb") as f:
@@ -335,6 +338,7 @@ class WeightStore:
         into it, eliminating a staging copy.
         """
         rec = self._leaf_rec(model_name, unit, leaf)
+        analysis.note_io("read_leaf_slice")   # lock-held-across-I/O probe
         close = False
         if fh is None:
             self.device.on_open()

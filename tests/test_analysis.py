@@ -1,0 +1,547 @@
+"""The concurrency toolkit itself: lint rules R1-R5 (fixture snippets,
+positive + negative, suppression syntax, stable IDs), the runtime lock
+probe (cycle detection, I/O hazards, cv-wait bookkeeping), barrier-
+released thread-fuzz storms over WeightCache / InstancePool under
+REPRO_ANALYZE=1, and the meta-test pinning ``src/repro`` clean modulo
+``tests/analysis_baseline.txt``."""
+import os
+import textwrap
+import threading
+import time
+
+import pytest
+
+from repro.analysis import lint as L
+from repro.analysis import lockgraph as G
+from repro.analysis import locks as RL
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src", "repro")
+BASELINE = os.path.join(REPO, "tests", "analysis_baseline.txt")
+
+
+def lint(src, relpath="mod.py"):
+    return L.lint_source(textwrap.dedent(src), relpath)
+
+
+def ids_of(findings):
+    return {f.id for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# R1 guarded-by
+# ---------------------------------------------------------------------------
+
+def test_r1_fires_on_unlocked_access_and_not_on_locked():
+    fs = lint("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0   # guarded-by: _lock
+
+            def good(self):
+                with self._lock:
+                    self._n += 1
+
+            def bad(self):
+                return self._n
+    """)
+    assert ids_of(fs) == {"R1:mod.py:C.bad:_n"}
+    assert fs[0].rule == "R1"
+
+
+def test_r1_factory_made_lock_and_registry_declaration():
+    fs = lint("""
+        from repro.analysis import make_lock
+
+        class C:
+            _guarded_by = {"_n": "_lock"}
+
+            def __init__(self):
+                self._lock = make_lock("C._lock")
+                self._n = 0
+
+            def bad(self):
+                self._n = 5
+    """)
+    assert ids_of(fs) == {"R1:mod.py:C.bad:_n"}
+
+
+def test_r1_writes_mode_checks_mutations_only():
+    fs = lint("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.events = []   # guarded-by[writes]: _lock
+
+            def ok_read(self):
+                return len(self.events)
+
+            def ok_locked_write(self):
+                with self._lock:
+                    self.events.append(1)
+
+            def bad_append(self):
+                self.events.append(1)
+
+            def bad_setitem(self):
+                self.events[0] = 2
+
+            def bad_rebind(self):
+                self.events = []
+    """)
+    assert ids_of(fs) == {"R1:mod.py:C.bad_append:events",
+                          "R1:mod.py:C.bad_setitem:events",
+                          "R1:mod.py:C.bad_rebind:events"}
+
+
+def test_r1_skips_locked_suffix_init_and_lambdas():
+    fs = lint("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0   # guarded-by: _lock
+
+            def _bump_locked(self):
+                self._n += 1          # caller holds the lock: convention
+
+            def deferred(self):
+                return lambda: self._n    # runs under unknowable scope
+    """)
+    assert fs == []
+
+
+def test_r1_inline_suppression():
+    fs = lint("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._n = 0   # guarded-by: _lock
+
+            def prepare(self):
+                self._n = 0   # analysis: ignore[R1]
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# R2 cv-wait discipline
+# ---------------------------------------------------------------------------
+
+R2_SRC = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self._cv = threading.Condition()
+            self.ready = False
+
+        def bad_poll(self):
+            with self._cv:
+                self._cv.wait(0.02)
+
+        def good(self, wait_s):
+            with self._cv:
+                while not self.ready:
+                    self._cv.wait(wait_s)
+"""
+
+
+def test_r2_flags_no_while_and_literal_timeout():
+    fs = lint(R2_SRC)
+    assert ids_of(fs) == {
+        "R2:mod.py:C.bad_poll:_cv.wait-not-in-while",
+        "R2:mod.py:C.bad_poll:_cv.wait-literal-timeout-0.02"}
+    # the good computed-deadline while-loop wait produced nothing
+    assert all("good" not in f.scope for f in fs)
+
+
+def test_r2_inline_suppression_and_stable_ids_across_line_shift():
+    shifted = "\n\n\n" + textwrap.dedent(R2_SRC)
+    assert ids_of(lint(R2_SRC)) == ids_of(L.lint_source(shifted, "mod.py"))
+
+
+# ---------------------------------------------------------------------------
+# R3 lock order
+# ---------------------------------------------------------------------------
+
+def test_r3_cycle_in_nested_with_acquisitions():
+    fs = lint("""
+        import threading
+
+        class A:
+            def __init__(self):
+                self._la = threading.Lock()
+                self._lb = threading.Lock()
+
+            def one(self):
+                with self._la:
+                    with self._lb:
+                        pass
+
+            def two(self):
+                with self._lb:
+                    with self._la:
+                        pass
+    """)
+    assert len(fs) == 1 and fs[0].rule == "R3"
+    assert "A._la" in fs[0].message and "A._lb" in fs[0].message
+
+
+def test_r3_edge_via_typed_attribute_call_resolution():
+    model = L.FileModel(textwrap.dedent("""
+        import threading
+
+        class Inner:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def poke(self):
+                with self._lock:
+                    pass
+
+        class Outer:
+            def __init__(self, inner: Inner):
+                self._lock = threading.Lock()
+                self.inner = inner
+
+            def call(self):
+                with self._lock:
+                    self.inner.poke()
+    """), "m.py")
+    edges, cycles = L.build_static_lockgraph([model])
+    assert ("Outer._lock", "Inner._lock") in {(e.src, e.dst) for e in edges}
+    assert cycles == []
+
+
+def test_r3_no_cycle_for_consistent_order():
+    fs = lint("""
+        import threading
+
+        class A:
+            def __init__(self):
+                self._la = threading.Lock()
+                self._lb = threading.Lock()
+
+            def one(self):
+                with self._la:
+                    with self._lb:
+                        pass
+
+            def two(self):
+                with self._la:
+                    with self._lb:
+                        pass
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# R4 time.sleep
+# ---------------------------------------------------------------------------
+
+def test_r4_flags_sleep_and_respects_allowlist():
+    src = """
+        import time
+
+        def poll():
+            time.sleep(0.1)
+    """
+    fs = lint(src)
+    assert ids_of(fs) == {"R4:mod.py:poll:time.sleep"}
+    # the simulated storage device is allowed to sleep
+    assert lint(src, relpath="store/store.py") == []
+    # inline suppression
+    assert lint(src.replace("time.sleep(0.1)",
+                            "time.sleep(0.1)  # analysis: ignore[R4]")) == []
+
+
+# ---------------------------------------------------------------------------
+# R5 jit-cache hygiene
+# ---------------------------------------------------------------------------
+
+def test_r5_flags_bound_method_jit_not_lambda_or_module_fn():
+    fs = lint("""
+        import jax
+        from repro.kernels import ref
+
+        class C:
+            def __init__(self, model):
+                self._bad = jax.jit(self.step)
+                self._bad2 = jax.jit(model.prefill)
+                self._ok = jax.jit(lambda p, b: model.forward(p, b))
+                self._ok2 = jax.jit(ref.decode_attention)
+
+            def step(self, x):
+                return x
+    """)
+    assert ids_of(fs) == {
+        "R5:mod.py:C.__init__:jit-bound-method-self.step",
+        "R5:mod.py:C.__init__:jit-bound-method-model.prefill"}
+
+
+def test_r5_inline_suppression():
+    fs = lint("""
+        import jax
+
+        class C:
+            def __init__(self, model):
+                self._f = jax.jit(model.assemble)  # analysis: ignore[R5]
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# baseline workflow
+# ---------------------------------------------------------------------------
+
+def test_baseline_load_apply_and_stale_detection(tmp_path):
+    fs = lint(R2_SRC)
+    p = tmp_path / "baseline.txt"
+    p.write_text(
+        "# comment line\n"
+        "R2:mod.py:C.bad_poll:_cv.wait-not-in-while  # legacy polling\n"
+        "R2:mod.py:C.gone:_cv.wait-not-in-while  # no longer exists\n")
+    baseline = L.load_baseline(str(p))
+    assert baseline["R2:mod.py:C.bad_poll:_cv.wait-not-in-while"] \
+        == "legacy polling"
+    unsup, stale = L.apply_baseline(fs, baseline)
+    assert ids_of(unsup) == {"R2:mod.py:C.bad_poll:"
+                             "_cv.wait-literal-timeout-0.02"}
+    assert stale == ["R2:mod.py:C.gone:_cv.wait-not-in-while"]
+
+
+# ---------------------------------------------------------------------------
+# meta: the repro tree itself is clean modulo the reviewed baseline
+# ---------------------------------------------------------------------------
+
+def test_src_repro_clean_modulo_baseline():
+    findings = L.lint_paths([SRC])
+    unsup, stale = L.apply_baseline(findings, L.load_baseline(BASELINE))
+    assert not unsup, "\n".join(f.render() for f in unsup)
+    assert not stale, f"stale baseline entries: {stale}"
+
+
+def test_src_repro_static_lockgraph_acyclic():
+    edges, cycles = L.build_static_lockgraph(L.load_models(SRC))
+    assert cycles == []
+
+
+# ---------------------------------------------------------------------------
+# runtime probe
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def analyze(monkeypatch):
+    monkeypatch.setenv("REPRO_ANALYZE", "1")
+    RL.probe.reset()
+    yield RL.probe
+    RL.probe.reset()
+
+
+def test_factory_returns_plain_primitives_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_ANALYZE", raising=False)
+    assert isinstance(RL.make_lock("x"), type(threading.Lock()))
+    assert isinstance(RL.make_condition("x"), threading.Condition)
+
+
+def test_probe_observes_edges_and_detects_inversion(analyze):
+    a, b = RL.make_lock("A"), RL.make_lock("B")
+    with a:
+        with b:
+            pass
+    assert analyze.cycles() == []
+    with b:
+        with a:                      # inversion: closes A->B->A
+            pass
+    cycles = analyze.cycles()
+    assert len(cycles) == 1 and set(cycles[0]) == {"A", "B"}
+    rep = analyze.report()
+    assert {(e["src"], e["dst"]) for e in rep["edges"]} \
+        == {("A", "B"), ("B", "A")}
+
+
+def test_probe_io_hazard_only_under_held_lock(analyze):
+    a = RL.make_lock("A")
+    RL.note_io("read_unit")                  # no lock held: fine
+    assert analyze.report()["hazards"] == []
+    with a:
+        RL.note_io("read_unit")
+    hz = analyze.report()["hazards"]
+    assert hz == [{"io": "read_unit", "held": ["A"],
+                   "thread": threading.current_thread().name}]
+
+
+def test_condition_wait_suspends_held_lock(analyze):
+    cv = RL.make_condition("CV")
+    seen = {}
+    done = []
+
+    def waiter():
+        with cv:
+            while not done:
+                cv.wait()
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    # while the waiter is parked its lock must be SUSPENDED, so another
+    # thread acquiring it records no contention-edge artifacts and an
+    # I/O probe on the waiter's behalf would see nothing held
+    with cv:
+        seen["acquired_while_waiting"] = True
+        done.append(1)
+        cv.notify_all()
+    t.join(timeout=5)
+    assert not t.is_alive() and seen["acquired_while_waiting"]
+    rep = analyze.report()
+    assert rep["cv_waits"]["CV"]["waits"] >= 1
+    assert rep["cv_waits"]["CV"]["timed_waits"] == 0
+    assert rep["cycles"] == []
+
+
+def test_probe_wait_for_records_waits(analyze):
+    cv = RL.make_condition("CV2")
+    done = []
+
+    def setter():
+        time.sleep(0.02)
+        with cv:
+            done.append(1)
+            cv.notify_all()
+
+    t = threading.Thread(target=setter)
+    t.start()
+    with cv:
+        assert cv.wait_for(lambda: done, timeout=5.0)
+    t.join()
+    assert analyze.report()["cv_waits"]["CV2"]["waits"] >= 1
+
+
+def test_merge_static_and_observed_graphs(analyze, tmp_path):
+    a, b = RL.make_lock("X"), RL.make_lock("Y")
+    with a:
+        with b:
+            pass
+    obs = tmp_path / "probe.json"
+    analyze.dump(str(obs))
+    static_edges = [L.LockEdge("Y", "X", "m.py:1")]
+    report = G.merge(static_edges, G.load_observed(str(obs)))
+    assert [tuple(c) for c in report["cycles"]] == [("X", "Y")]
+    text = G.render(report)
+    assert "CYCLES" in text and "X -> Y" in text
+
+
+# ---------------------------------------------------------------------------
+# thread-fuzz storms (satellite): cache + pool under the probe
+# ---------------------------------------------------------------------------
+
+def test_fuzz_weight_cache_storm(analyze):
+    from repro.store.cache import HIT, LOAD, WeightCache
+
+    cache = WeightCache(budget_bytes=3_000)      # forces evictions
+    cache.register_load("m")
+    units = [f"u{i}" for i in range(6)]
+    n_threads = 8
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            for i in range(30):
+                u = units[(tid + i) % len(units)]
+                status, leaves = cache.begin("m", u)
+                if status == LOAD:
+                    cache.complete("m", u, {"w": tid}, 1_000)
+                else:
+                    assert status == HIT and leaves is not None
+                cache.release("m", u)
+        except BaseException as e:               # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors and not any(t.is_alive() for t in threads)
+    cache.unregister_load("m")
+    st = cache.stats()
+    assert st.pinned == 0
+    rep = analyze.report()
+    assert rep["cycles"] == []
+    assert rep["hazards"] == []
+    assert rep["locks"]["WeightCache._cv"]["acquires"] > 0
+
+
+def test_fuzz_instance_pool_storm(analyze):
+    from repro.serving.pool import InstancePool
+
+    class _Dummy:
+        gen_slots = 4
+
+        def __init__(self):
+            self.params = None
+
+        @property
+        def live(self):
+            return self.params is not None
+
+        def evict(self):
+            self.params = None
+
+    pool = InstancePool("m", builder=None, max_instances=3,
+                        instance_factory=_Dummy)
+    n_threads = 8
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            for i in range(25):
+                if (tid + i) % 2:
+                    try:
+                        inst = pool.acquire(timeout=5.0, logical_now=i)
+                    except TimeoutError:
+                        continue
+                    inst.params = {"w": 1}
+                    pool.release(inst, logical_now=i, cold=False)
+                else:
+                    try:
+                        inst, joinable = pool.acquire_gen(timeout=5.0)
+                    except TimeoutError:
+                        continue
+                    if not joinable:
+                        inst.params = {"w": 1}
+                        pool.mark_live(inst)
+                    pool.release_gen(inst, logical_now=i)
+        except BaseException as e:               # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors and not any(t.is_alive() for t in threads)
+    st = pool.stats()
+    assert st.busy == 0 and st.gen_active == 0
+    rep = analyze.report()
+    assert rep["cycles"] == []
+    assert rep["locks"]["InstancePool._cv"]["acquires"] > 0
+    # and the two fuzzed modules are R1-clean statically
+    fs = L.lint_paths([os.path.join(SRC, "store", "cache.py"),
+                       os.path.join(SRC, "serving", "pool.py")])
+    assert [f for f in fs if f.rule == "R1"] == []

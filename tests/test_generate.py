@@ -355,7 +355,7 @@ def test_scheduler_runs_interpret_kernels_bit_identical(dense, monkeypatch):
 
     cfg, m, params = dense
     monkeypatch.setenv("REPRO_PALLAS", "interpret")
-    before = dict(ops.registry.dispatch_counts)
+    before = ops.registry.dispatch_snapshot()
     sched = DecodeScheduler(m, params, n_slots=2, cache_len=CACHE_LEN)
     assert sched.kernel_modes["flash_attention"] == "interpret"
     assert sched.kernel_modes["decode_attention"] == "interpret"
@@ -364,8 +364,9 @@ def test_scheduler_runs_interpret_kernels_bit_identical(dense, monkeypatch):
     want = reference_generate(m, params, spec.prompt, n_new=4,
                               cache_len=CACHE_LEN)
     assert got == want
+    after = ops.registry.dispatch_snapshot()
     for kern in ("flash_attention", "decode_attention"):
-        assert ops.registry.dispatch_counts.get((kern, "interpret"), 0) > \
+        assert after.get((kern, "interpret"), 0) > \
             before.get((kern, "interpret"), 0), kern
 
 
