@@ -1,0 +1,188 @@
+"""Open-loop load generator: Poisson/burst arrivals against a live Router.
+
+Trace replay (``run_trace``) is *closed-loop* at low concurrency — a
+slow response slows the arrival of the next request, which hides
+overload (coordinated omission).  SLO numbers need the opposite: an
+**open loop** that submits on a fixed wall-clock schedule no matter how
+far behind the platform falls, so queueing delay under a burst shows up
+in the measurements instead of silently stretching the workload.
+
+Pieces:
+
+  * :func:`poisson_arrivals` — piecewise-constant-rate Poisson arrival
+    times (``phases = [(duration_s, rps), ...]``); a 10x burst is just
+    a high-rate middle phase;
+  * :class:`LoadClass` — one request class in the mix: its share of
+    arrivals, whether it is one-shot or generation, and its SLO target
+    (one-shot: end-to-end latency from submit; generation: TTFT from
+    submit — both are what a *client* experiences, so router queueing
+    and on-path cold starts count against the target);
+  * :func:`run_open_loop` — submit every arrival at its scheduled wall
+    time on the caller's thread (sleeping the gaps), collect every
+    Future, and return per-request records;
+  * :func:`slo_report` — per-class and overall attainment + latency
+    percentiles from those records.
+
+This module is driven by ``trace_bench --workload slo`` (the
+BENCH_slo.json artifact) and is importable for ad-hoc load tests
+against any Router-compatible ``submit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.api import AdmissionError, GenerateSpec, Request
+
+
+def poisson_arrivals(phases: Sequence[Tuple[float, float]],
+                     rng: np.random.Generator) -> List[float]:
+    """Arrival offsets (seconds from t=0) for piecewise-constant-rate
+    Poisson traffic.  ``phases``: [(duration_s, rate_rps), ...]."""
+    out: List[float] = []
+    t0 = 0.0
+    for dur, rate in phases:
+        if rate > 0:
+            t = t0 + float(rng.exponential(1.0 / rate))
+            while t < t0 + dur:
+                out.append(t)
+                t += float(rng.exponential(1.0 / rate))
+        t0 += dur
+    return out
+
+
+@dataclasses.dataclass
+class LoadClass:
+    """One request class in the mixed workload."""
+    name: str
+    weight: float                    # share of arrivals (normalized)
+    gen: bool                        # generation vs one-shot
+    slo_s: float                     # target: TTFT (gen) / latency (oneshot)
+                                     # measured from *submit*
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One submitted request's outcome."""
+    req_id: int
+    cls_name: str
+    gen: bool
+    t_sched: float                   # scheduled arrival offset
+    t_lag: float                     # submit lateness vs schedule
+    ok: bool = False
+    rejected: bool = False
+    error: Optional[str] = None
+    cold: Optional[bool] = None
+    # client-perceived times, all measured from submit:
+    latency_s: Optional[float] = None
+    ttft_s: Optional[float] = None   # gen only (queue + service TTFT)
+
+    def slo_time(self) -> Optional[float]:
+        """The time the class SLO is judged on."""
+        if not self.ok:
+            return None
+        return self.ttft_s if self.gen else self.latency_s
+
+
+def run_open_loop(submit: Callable[[Request], "object"],
+                  model: str,
+                  arrivals: Sequence[float],
+                  classes: Sequence[LoadClass],
+                  make_spec: Callable[[int], GenerateSpec],
+                  make_batch: Callable[[], dict],
+                  rng: np.random.Generator,
+                  time_scale: float = 1.0) -> List[RequestRecord]:
+    """Submit one request per arrival at its scheduled wall time.
+
+    Open loop: the schedule never waits for completions — if the
+    platform falls behind, requests stack up in the router queue and
+    their queue_s grows, exactly as a real overload would look.
+    ``time_scale`` scales the schedule (0.5 = twice as fast).
+    Rejected admissions (queue full) are recorded, not raised.
+    """
+    weights = np.array([c.weight for c in classes], float)
+    weights /= weights.sum()
+    picks = rng.choice(len(classes), size=len(arrivals), p=weights)
+    t0 = time.monotonic()
+    pending: List[Tuple[RequestRecord, "object"]] = []
+    records: List[RequestRecord] = []
+    for i, (t_arr, ci) in enumerate(zip(arrivals, picks)):
+        cls = classes[ci]
+        target = t0 + t_arr * time_scale
+        lag = time.monotonic() - target
+        if lag < 0:
+            time.sleep(-lag)
+            lag = 0.0
+        rec = RequestRecord(req_id=i, cls_name=cls.name, gen=cls.gen,
+                            t_sched=t_arr, t_lag=lag)
+        records.append(rec)
+        req = Request(req_id=i, model=model,
+                      gen=make_spec(i) if cls.gen else None,
+                      batch=None if cls.gen else make_batch(),
+                      t_logical=t_arr)
+        try:
+            fut = submit(req)
+        except AdmissionError:
+            rec.rejected = True
+            continue
+        pending.append((rec, fut))
+    for rec, fut in pending:
+        try:
+            resp = fut.result()
+        except BaseException as e:            # record, don't abort the run
+            rec.error = f"{type(e).__name__}: {e}"
+            continue
+        rec.ok = True
+        rec.cold = resp.cold
+        rec.latency_s = resp.queue_s + resp.latency_s
+        if resp.ttft_s is not None:
+            rec.ttft_s = resp.queue_s + resp.ttft_s
+    return records
+
+
+def slo_report(records: Sequence[RequestRecord],
+               classes: Sequence[LoadClass]) -> Dict[str, object]:
+    """Attainment + client-perceived percentiles.
+
+    attainment = requests meeting their class SLO / all *scheduled*
+    requests — a rejected or failed request counts as a miss (dropping
+    it would let an overloaded platform shed its way to 100%).
+    """
+    by_name = {c.name: c for c in classes}
+    met = 0
+    per_class: Dict[str, List[float]] = {c.name: [] for c in classes}
+    ttfts: List[float] = []
+    n_cold = 0
+    for r in records:
+        t = r.slo_time()
+        if t is not None:
+            per_class[r.cls_name].append(t)
+            if t <= by_name[r.cls_name].slo_s:
+                met += 1
+            if r.ttft_s is not None:
+                ttfts.append(r.ttft_s)
+            if r.cold:
+                n_cold += 1
+    out: Dict[str, object] = {
+        "n": len(records),
+        "n_ok": sum(1 for r in records if r.ok),
+        "n_rejected": sum(1 for r in records if r.rejected),
+        "n_errors": sum(1 for r in records if r.error),
+        "n_cold": n_cold,
+        "attainment": met / len(records) if records else 0.0,
+        "ttft_p50_ms": float(np.percentile(ttfts, 50)) * 1e3
+        if ttfts else None,
+        "ttft_p99_ms": float(np.percentile(ttfts, 99)) * 1e3
+        if ttfts else None,
+    }
+    for name, vals in per_class.items():
+        out[f"{name}/n"] = len(vals)
+        out[f"{name}/p99_ms"] = float(np.percentile(vals, 99)) * 1e3 \
+            if vals else None
+        out[f"{name}/attain"] = (
+            sum(1 for v in vals if v <= by_name[name].slo_s) / len(vals)
+            if vals else 0.0)
+    return out

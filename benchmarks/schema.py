@@ -1,0 +1,108 @@
+"""Schema for the BENCH_*.json artifacts — validated at emit time and
+in CI's bench-smoke job, so a drive-by edit to a bench script can't
+silently produce an artifact the gate (benchmarks/bench_gate.py) or a
+downstream dashboard can no longer parse.
+
+The shape every artifact shares:
+
+    {"bench":  "<trace|generate|sharded|sharded_int8|slo|...>",
+     "header": ["name", "<value-label>", "derived"],
+     "rows":   [["<metric/path>", <number>, <number>], ...]}
+
+Row names are slash-paths (``trace/cicada/mean``) and must be unique
+within an artifact — the gate keys on them.  Values must be finite
+(NaN/inf mean a bench mis-measured; failing here beats gating on them).
+
+Usage:
+    from benchmarks import schema
+    schema.validate(obj)                      # raises SchemaError
+    python benchmarks/schema.py BENCH_*.json  # CLI: exit 1 on invalid
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import Any, Dict
+
+
+class SchemaError(ValueError):
+    """A BENCH artifact violates the schema."""
+
+
+def _fail(msg: str):
+    raise SchemaError(msg)
+
+
+def validate(obj: Any, *, source: str = "<obj>") -> Dict[str, Any]:
+    """Validate one parsed BENCH artifact; returns it for chaining."""
+    if not isinstance(obj, dict):
+        _fail(f"{source}: artifact must be a JSON object, "
+              f"got {type(obj).__name__}")
+    missing = [k for k in ("bench", "header", "rows") if k not in obj]
+    if missing:
+        _fail(f"{source}: missing keys {missing}")
+    bench = obj["bench"]
+    if not isinstance(bench, str) or not bench:
+        _fail(f"{source}: 'bench' must be a non-empty string")
+    header = obj["header"]
+    if (not isinstance(header, list) or len(header) != 3
+            or not all(isinstance(h, str) and h for h in header)):
+        _fail(f"{source}: 'header' must be 3 non-empty strings, "
+              f"got {header!r}")
+    if header[0] != "name":
+        _fail(f"{source}: header[0] must be 'name', got {header[0]!r}")
+    rows = obj["rows"]
+    if not isinstance(rows, list) or not rows:
+        _fail(f"{source}: 'rows' must be a non-empty list")
+    seen = set()
+    for i, row in enumerate(rows):
+        where = f"{source}: rows[{i}]"
+        if not isinstance(row, list) or len(row) != 3:
+            _fail(f"{where}: must be [name, value, derived], got {row!r}")
+        name, value, derived = row
+        if not isinstance(name, str) or not name:
+            _fail(f"{where}: name must be a non-empty string")
+        if name in seen:
+            _fail(f"{where}: duplicate row name {name!r}")
+        seen.add(name)
+        for label, v in (("value", value), ("derived", derived)):
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                _fail(f"{where} ({name}): {label} must be a number, "
+                      f"got {v!r}")
+            if not math.isfinite(v):
+                _fail(f"{where} ({name}): {label} is {v!r} — "
+                      f"the bench mis-measured")
+    return obj
+
+
+def validate_file(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        try:
+            obj = json.load(f)
+        except json.JSONDecodeError as e:
+            raise SchemaError(f"{path}: not valid JSON: {e}") from e
+    return validate(obj, source=path)
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: python benchmarks/schema.py BENCH_*.json",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for path in paths:
+        try:
+            obj = validate_file(path)
+        except (SchemaError, OSError) as e:
+            print(f"FAIL {e}")
+            bad += 1
+        else:
+            print(f"ok   {path}: bench={obj['bench']} "
+                  f"rows={len(obj['rows'])}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

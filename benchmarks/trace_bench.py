@@ -22,8 +22,20 @@ shard streams carry value+scale slices and the placement lanes run the
 per-shard ``weight_transform`` dequant before each commit (the
 BENCH_sharded_int8.json artifact).
 
+``--workload slo`` runs the open-loop SLO bench (benchmarks/load_gen):
+a mixed one-shot + generation Poisson workload with a 10x burst phase,
+replayed twice from the same arrival schedule — once against a bare
+platform (``slo/noscale/*`` rows) and once with the Autoscaler
+pre-provisioning warm instances off the arrival-rate slope
+(``slo/autoscale/*`` rows) — reporting client-perceived p99 TTFT and
+per-class SLO attainment, plus the noscale/autoscale improvement ratio
+(the BENCH_slo.json artifact).
+
 ``--pallas {auto,pallas,interpret,ref}`` forces the kernel dispatch
 registry (default: auto — capability-probed per kernel).
+
+Every ``--json-out`` artifact is validated against benchmarks/schema.py
+before it is written (CI re-validates the files in bench-smoke).
 
 Run directly for CI's bench-smoke job:
 
@@ -34,6 +46,8 @@ Run directly for CI's bench-smoke job:
         --json-out BENCH_generate.json
     PYTHONPATH=src:. python benchmarks/trace_bench.py --quick --mesh \
         --bandwidth-mbps 200 --json-out BENCH_sharded.json
+    PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
+        --workload slo --models smollm-360m --json-out BENCH_slo.json
 """
 from __future__ import annotations
 
@@ -49,7 +63,7 @@ if "--mesh" in sys.argv and "XLA_FLAGS" not in os.environ:
 
 import numpy as np
 
-from benchmarks import common
+from benchmarks import common, schema
 from repro.serving.api import GenerateSpec, Request
 from repro.serving.decode import reference_generate
 from repro.serving.engine import ServerlessPlatform
@@ -235,6 +249,142 @@ def generate_run(args):
     return rows
 
 
+def slo_run(args):
+    """--workload slo: open-loop SLO attainment under a 10x burst.
+
+    The same Poisson arrival schedule (trickle phase, then a 10x burst)
+    is replayed twice through benchmarks/load_gen's open loop — mixed
+    generation + one-shot classes, each with a client-perceived SLO
+    target measured from submit:
+
+      noscale    bare platform; the burst's scale-out cold starts run
+                 on the request path and land in p99 TTFT
+      autoscale  the Autoscaler observes the trickle, pre-provisions
+                 warm instances off the arrival-rate slope, and the
+                 burst finds them ready
+
+    Jit compilation is warmed (and the pool scaled back to cold)
+    before each measured run, and the store is re-wrapped at
+    ``--slo-bandwidth-mbps`` so a cold start costs what it costs in
+    the paper's regime instead of vanishing into this host's page
+    cache with smoke-size weights.
+
+    Rows (name, value, derived):
+      slo/{v}/attainment        fraction of *scheduled* requests meeting
+                                their class SLO (rejected/failed = miss);
+                                derived = n scheduled
+      slo/{v}/ttft_p50_ms       client TTFT (queue + service first token)
+      slo/{v}/ttft_p99_ms       derived = cold-served request count
+      slo/{v}/oneshot_p99_ms    one-shot client latency p99; derived = n
+      slo/autoscale/prewarms    off-path provisioning runs; derived =
+                                live instances at drain
+      slo/improvement/p99_ttft_ratio
+                                noscale p99 TTFT / autoscale p99 TTFT
+                                (>1: the autoscaler moved the tail);
+                                derived = attainment delta
+    """
+    from benchmarks import load_gen as lg
+    from repro.store.store import BandwidthModel, WeightStore
+
+    rows = []
+    name = args.models[0]
+    cfg, model = common.get_model(name, args.quick)
+    if not hasattr(model, "decode_step"):
+        raise SystemExit(
+            f"--workload slo needs a decoder LM, got {name!r} "
+            f"({cfg.family.value}); try --models smollm-360m")
+    store, root = common.deployed_store(args)
+    common.ensure_deployed(store, name, args.quick)
+    slow = WeightStore(root, BandwidthModel(args.slo_bandwidth_mbps, 0.2))
+
+    n_new = args.n_new or 8
+    prompt_len = args.prompt_len
+    cache_len = max(64, prompt_len + n_new)
+    max_inst = 4
+    base_rps = 1.5
+    phases = [(3.0, base_rps), (2.0, 10.0 * base_rps)]
+    # between warm service (~15ms TTFT / ~1ms one-shot) and an on-path
+    # cold start (~150ms+ at the slo bandwidth): warm requests pass,
+    # requests that pay a cold start or deep queueing miss
+    classes = [lg.LoadClass("gen", weight=0.75, gen=True, slo_s=0.075),
+               lg.LoadClass("oneshot", weight=0.25, gen=False,
+                            slo_s=0.075)]
+
+    def spec(i):
+        rng = np.random.default_rng(max(i, 0) + 1)
+        return GenerateSpec(
+            prompt=rng.integers(0, cfg.vocab_size,
+                                (prompt_len,)).astype(np.int32),
+            n_new=n_new, seed=max(i, 0))
+
+    def make_batch():
+        return common.make_batch(cfg)
+
+    reports = {}
+    for tag, autoscale in (
+            ("noscale", None),
+            # budget 0.4 rps/instance so the trickle alone justifies a
+            # full pool; horizon ~ a few cold starts ahead; scale-in
+            # disabled (the run is shorter than any idle window)
+            ("autoscale", dict(rps_per_instance=0.4, window_s=4.0,
+                               horizon_s=2.0, queue_per_instance=4,
+                               idle_scale_in_s=1e9, interval_s=0.1,
+                               max_prewarm_workers=3))):
+        rng = np.random.default_rng(0)      # same schedule both runs
+        arrivals = lg.poisson_arrivals(phases, rng)
+        platform = ServerlessPlatform(
+            slow, {name: (lambda: (model, common.make_batch(cfg)))},
+            strategy="cicada", keep_alive_s=1e9, max_instances=max_inst,
+            gen_slots=2, gen_cache_len=cache_len, autoscale=autoscale)
+        router = platform.router(workers=2 * max_inst)
+        try:
+            # compile prefill/step/assemble outside the measured window,
+            # then evict back so both variants start from a cold pool
+            router.submit(Request(req_id=-1, model=name,
+                                  gen=spec(-1))).result()
+            router.submit(Request(req_id=-2, model=name,
+                                  batch=make_batch())).result()
+            for _ in range(200):
+                platform.pools[name].scale_in(0)
+                if platform.pool_stats()[name].live == 0:
+                    break
+                time.sleep(0.01)
+            assert platform.pool_stats()[name].live == 0
+            if platform.autoscaler is not None:
+                platform.autoscaler.start()
+            recs = lg.run_open_loop(router.submit, name, arrivals,
+                                    classes, spec, make_batch, rng)
+        finally:
+            if platform.autoscaler is not None:
+                platform.autoscaler.stop()
+            router.shutdown()
+        rep = lg.slo_report(recs, classes)
+        reports[tag] = rep
+        ps = platform.pool_stats()[name]
+        print(f"# slo/{tag}: n={rep['n']} ok={rep['n_ok']} "
+              f"cold={rep['n_cold']} prewarms={ps.prewarms} "
+              f"live={ps.live} attain={rep['attainment']:.2f} "
+              f"ttft_p99={rep['ttft_p99_ms'] or 0.0:.1f}ms")
+        rows.append([f"slo/{tag}/attainment", rep["attainment"],
+                     float(rep["n"])])
+        rows.append([f"slo/{tag}/ttft_p50_ms",
+                     rep["ttft_p50_ms"] or 0.0, 0.0])
+        rows.append([f"slo/{tag}/ttft_p99_ms",
+                     rep["ttft_p99_ms"] or 0.0, float(rep["n_cold"])])
+        rows.append([f"slo/{tag}/oneshot_p99_ms",
+                     rep["oneshot/p99_ms"] or 0.0,
+                     float(rep["oneshot/n"])])
+        if tag == "autoscale":
+            rows.append(["slo/autoscale/prewarms", float(ps.prewarms),
+                         float(ps.live)])
+    no, au = reports["noscale"], reports["autoscale"]
+    if no["ttft_p99_ms"] and au["ttft_p99_ms"]:
+        rows.append(["slo/improvement/p99_ttft_ratio",
+                     no["ttft_p99_ms"] / au["ttft_p99_ms"],
+                     au["attainment"] - no["attainment"]])
+    return rows
+
+
 def _mesh_tag(args) -> str:
     """Row prefix AND json bench name of the --mesh sweep (one source
     so the artifact's bench field can't drift from its rows)."""
@@ -336,6 +486,11 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
         common.print_csv(["name", "value", "derived"], rows)
         _write_json(args, rows, "generate")
         return rows
+    if getattr(args, "workload", "trace") == "slo":
+        rows = slo_run(args)
+        common.print_csv(["name", "value", "derived"], rows)
+        _write_json(args, rows, "slo")
+        return rows
     rows = []
     store, _ = common.deployed_store(args)
     models = common.model_list(args)
@@ -379,12 +534,16 @@ def _write_json(args, rows, bench: str):
     json_out = getattr(args, "json_out", None)
     if json_out:
         header = {"generate": ["name", "value", "derived"],
+                  "slo": ["name", "value", "derived"],
                   "sharded": ["name", "load_ms", "derived"],
                   "sharded_int8": ["name", "load_ms", "derived"]}.get(
             bench, ["name", "us_per_call", "derived"])
+        obj = {"bench": bench, "header": header,
+               "rows": [[n, float(v), float(d)] for n, v, d in rows]}
+        # catch a malformed artifact at the producer, not in CI
+        schema.validate(obj, source=json_out)
         with open(json_out, "w") as f:
-            json.dump({"bench": bench, "header": header, "rows": rows},
-                      f, indent=2)
+            json.dump(obj, f, indent=2)
         print(f"# wrote {json_out}")
 
 
@@ -395,11 +554,18 @@ def main(argv=None):
     ap.add_argument("--json-out", default=None,
                     help="also write rows as JSON (CI artifact)")
     ap.add_argument("--workload", default="trace",
-                    choices=["trace", "generate"],
+                    choices=["trace", "generate", "slo"],
                     help="trace: one-shot replay benches (default); "
                          "generate: continuous-batching TTFT/TPOT/"
                          "tokens-per-second benches (LM model required, "
-                         "e.g. --models smollm-360m)")
+                         "e.g. --models smollm-360m); slo: open-loop "
+                         "10x-burst SLO attainment, autoscaler on vs "
+                         "off (LM model required)")
+    ap.add_argument("--slo-bandwidth-mbps", type=float, default=5.0,
+                    help="--workload slo: simulated store bandwidth for "
+                         "the SLO runs (low, so a cold start has a "
+                         "realistic cost relative to smoke-size "
+                         "weights)")
     ap.add_argument("--n-new", type=int, default=None,
                     help="tokens per generation request "
                          "(default: 16 quick / 32 full)")

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import metrics as metrics_mod
 from repro.core import miniloader
 from repro.core.decoupler import WeightDecoupler
 from repro.core.pipeline import PipelineTrace
@@ -70,7 +71,8 @@ class ColdStartEngine:
                  strategy: str = "cicada", io_workers: int = 4,
                  chunk_bytes: int = 1 << 20,
                  apply_dtype=None, cache: Optional[WeightCache] = None,
-                 mesh=None, rules: Optional[ShardingRules] = None):
+                 mesh=None, rules: Optional[ShardingRules] = None,
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
         """apply_dtype: cast weights to this dtype at application time
         (None -> keep stored dtype).
 
@@ -92,6 +94,7 @@ class ColdStartEngine:
         self.chunk_bytes = chunk_bytes
         self.apply_dtype = apply_dtype
         self.cache = cache
+        self.metrics = metrics_mod.resolve(metrics)
         if mesh is not None and mesh.size <= 1:
             mesh = None                    # degenerate: exact seed path
         self.mesh = mesh
@@ -295,7 +298,24 @@ class ColdStartEngine:
             # unregister_load), so it must run on the failure path too
             dec.shutdown()
         trace.finish()
+        self._record_load(trace)
         return result
+
+    # 0..1 in even tenths — utilization is a ratio, not a latency, so
+    # the log-spaced second buckets would collapse it into two bins
+    UTIL_BUCKETS = tuple(i / 10 for i in range(1, 11))
+
+    def _record_load(self, trace: PipelineTrace):
+        """Per-load instruments: pipeline time, utilization, and the
+        paper's per-stage waiting times (Q3) as live histograms."""
+        m = self.metrics
+        m.counter("coldstart/loads").inc()
+        m.histogram("coldstart/load_s").observe(trace.total_time())
+        m.histogram("coldstart/utilization",
+                    buckets=self.UTIL_BUCKETS).observe(trace.utilization())
+        wait = trace.wait_by_stage()
+        m.histogram("pipeline/wait_A_s").observe(wait.get("A", 0.0))
+        m.histogram("pipeline/wait_E_s").observe(wait.get("E", 0.0))
 
     # ------------------------------------------------- traditional (Fig. 1)
     def _load_traditional(self, batch, units, keys, trace, dec,

@@ -144,7 +144,7 @@ class WeightDecoupler:
         for u in units:
             plan = self.plan_fn(u)
             self._plans[u] = plan
-            data = ShardedUnitData(plan)
+            data = ShardedUnitData(plan, trace=self.trace)
             if self._mesh_tag is None:
                 self._mesh_tag = plan.tag
             self._reads_left[u] = plan.n_shards     # analysis: ignore[R1]

@@ -12,7 +12,16 @@ The paper's metrics (Sec. IV-C) all derive from per-stage timestamps:
 
 Stages: L = layer construction, R = weight file retrieval (its own row
 only under the WeightDecoupler), A = weight application, E = inference
-execution.  Thread-safe; timestamps are ``time.monotonic()``.
+execution, T = per-shard weight transform (dequant/cast fused into the
+shard committer's placement lane under a mesh — previously invisible to
+the trace because it happens inside R's landing path, before A).
+Thread-safe; timestamps are ``time.monotonic()``.
+
+T events carry ``meta={"shard": <device index>}`` and live on their own
+Gantt row; they are *excluded* from the default busy/utilization stage
+set, matching R: transform work rides the retrieval lanes, so counting
+it would double-book intervals the utilization metric already treats as
+overlap-eligible I/O time.
 """
 from __future__ import annotations
 
@@ -22,13 +31,14 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro import analysis
 
-STAGE_ROW = {"L": "Layer", "R": "Retrieve", "A": "Weight", "E": "Compute"}
+STAGE_ROW = {"L": "Layer", "R": "Retrieve", "T": "Transform",
+             "A": "Weight", "E": "Compute"}
 PRED = {"A": "L", "E": "A"}       # waiting-time predecessor (paper Sec IV-C)
 
 
 @dataclasses.dataclass
 class StageEvent:
-    stage: str                    # "L" | "R" | "A" | "E"
+    stage: str                    # "L" | "R" | "T" | "A" | "E"
     layer: str                    # unit name, e.g. "block_003"
     t_start: float
     t_end: float
@@ -194,7 +204,7 @@ class PipelineTrace:
         ts, te = self._bounds()
         span = max(te - ts, 1e-9)
         lines = []
-        for row in ("Layer", "Retrieve", "Weight", "Compute"):
+        for row in ("Layer", "Retrieve", "Transform", "Weight", "Compute"):
             evs = [e for e in self.events if e.row == row]
             if not evs:
                 continue
@@ -217,6 +227,7 @@ class PipelineTrace:
             "utilization": self.utilization(),
             "work_L": work.get("L", 0.0),
             "work_R": work.get("R", 0.0),
+            "work_T": work.get("T", 0.0),
             "work_A": work.get("A", 0.0),
             "work_E": work.get("E", 0.0),
             "wait_A": wait.get("A", 0.0),

@@ -41,6 +41,7 @@ whole by exactly one stream, round-robined across shards for balance.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -210,8 +211,14 @@ class ShardedUnitData:
     the steady-state sharded leaf.
     """
 
-    def __init__(self, plan: UnitShardPlan):
+    def __init__(self, plan: UnitShardPlan, *, trace=None):
+        """trace: a PipelineTrace — each shard whose placement lane ran
+        the fused ``weight_transform`` emits a per-shard ``T`` event
+        (``meta={"shard": i}``) so the transform work that previously
+        hid inside the retrieval lanes shows up as its own Gantt
+        sub-row."""
         self.plan = plan
+        self.trace = trace
         self._lock = analysis.make_lock("ShardedUnitData._lock")
         self._host: Dict[str, np.ndarray] = {}        # guarded-by: _lock
         # transformed leaves also merge their *dequantized/cast* shard
@@ -292,6 +299,7 @@ class ShardedUnitData:
         put_keys: List[Tuple[str, int]] = []
         put_arrs: List[Any] = []
         put_devs: List[Any] = []
+        t_t0 = t_t1 = None          # this shard's transform-work span
         for (leaf, arr, scale, index), piece in zip(payload,
                                                     plan.pieces[shard]):
             if index is None:                        # whole-payload leaf
@@ -300,8 +308,11 @@ class ShardedUnitData:
                     self._scales[leaf] = scale
                 src = arr
                 if plan.transformed[leaf]:
+                    if t_t0 is None:
+                        t_t0 = time.monotonic()
                     src = np.asarray(self._transform(arr, scale, leaf)
                                      ).reshape(plan.shapes[leaf])
+                    t_t1 = time.monotonic()
                     with self._lock:
                         self._host_t[leaf] = src
                 if plan.commit[leaf]:
@@ -328,8 +339,11 @@ class ShardedUnitData:
                 full[tuple(index)] = arr             # disjoint per shard
             src = None
             if plan.transformed[leaf]:               # fused per-shard apply
+                if t_t0 is None:
+                    t_t0 = time.monotonic()
                 src = self._transform(arr, scale, leaf)
                 self._merge_transformed(leaf, index, src)
+                t_t1 = time.monotonic()
             if plan.commit[leaf]:
                 for d in piece.devices:              # eager mesh commit
                     put_keys.append((leaf, d.id))
@@ -339,6 +353,9 @@ class ShardedUnitData:
             bufs = jax.device_put(put_arrs, put_devs)
             with self._lock:
                 self._bufs.update(zip(put_keys, bufs))
+        if t_t0 is not None and self.trace is not None:
+            self.trace.add_event("T", plan.unit, t_t0, t_t1,
+                                 meta={"shard": shard})
         with self._lock:
             self._arrived += 1
             last = self._arrived >= plan.n_shards

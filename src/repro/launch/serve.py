@@ -130,6 +130,17 @@ def main(argv=None):
                          "independent link per device)")
     ap.add_argument("--store", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the platform's metrics snapshot (the "
+                         "scrapeable counter/gauge/histogram JSON) to "
+                         "this path after the replay")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="attach the SLO autoscaler: pre-provision warm "
+                         "instances on arrival-rate slope / queue "
+                         "depth, scale-in on idle")
+    ap.add_argument("--rps-per-instance", type=float, default=2.0,
+                    help="--autoscale: arrival rate one warm instance "
+                         "is budgeted to absorb")
     args = ap.parse_args(argv)
 
     if args.pallas:
@@ -171,7 +182,12 @@ def main(argv=None):
                                   gen_slots=args.gen_slots,
                                   gen_cache_len=args.gen_cache_len,
                                   mesh_shape=(1, args.mesh)
-                                  if args.mesh > 1 else None)
+                                  if args.mesh > 1 else None,
+                                  autoscale=dict(
+                                      rps_per_instance=args.rps_per_instance)
+                                  if args.autoscale else None)
+    if platform.autoscaler is not None:
+        platform.autoscaler.start()
 
     def make_batch(name):
         return example_batch(get_config(name, smoke=args.smoke))
@@ -239,6 +255,17 @@ def main(argv=None):
               f"deduped-reads={cs.waits} evictions={cs.evictions} "
               f"resident={cs.bytes_cached / 1e6:.1f}MB "
               f"hit-rate={cs.hit_rate:.0%}")
+    if platform.autoscaler is not None:
+        platform.autoscaler.stop()
+    if args.metrics_out:
+        snap = platform.metrics_snapshot()
+        import json
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=2)
+        print(f"metrics snapshot -> {args.metrics_out} "
+              f"({len(snap['counters'])} counters, "
+              f"{len(snap['gauges'])} gauges, "
+              f"{len(snap['histograms'])} histograms)")
     return responses
 
 

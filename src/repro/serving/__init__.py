@@ -2,6 +2,8 @@
 
   api      Request / GenerateSpec / RequestClass / Response / stats +
            typed errors (UnknownModelError, CacheOverflowError)
+  autoscale  SLO autoscaler: arrival-rate slope + queue depth drive
+           pool prewarm / scale-in (repro.metrics is the signal source)
   decode   DecodeScheduler: slot-based continuous-batching decode
            engine + the serial reference_generate oracle
   policy   keep-alive eviction policies (TTL, never-evict)
@@ -23,6 +25,7 @@ from repro.serving.api import (AdmissionError, CacheOverflowError,  # noqa: F401
                                UnknownModelError)
 from repro.serving.decode import (DecodeScheduler, GenResult,  # noqa: F401
                                   reference_generate)
+from repro.serving.autoscale import Autoscaler  # noqa: F401
 from repro.serving.policy import (EvictionPolicy, KeepAliveTTL,  # noqa: F401
                                   NeverEvict, make_policy)
 from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401

@@ -127,6 +127,7 @@ class PoolStats:
     warm_hits: int
     evictions: int
     gen_active: int = 0     # generation requests currently joined
+    prewarms: int = 0       # autoscaler pre-provisioned warm-ups
 
 
 @dataclasses.dataclass

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import analysis
+from repro import analysis, metrics as metrics_mod
 from repro.kernels import ops
 from repro.serving.api import CacheOverflowError, GenerateSpec
 
@@ -168,6 +168,40 @@ def _prefill_fn(model, fingerprint):
                    model.prefill(params, batch, cache))
 
 
+@functools.lru_cache(maxsize=16)
+def _step_fn(model, fingerprint):
+    """Jitted batched decode step + sampling, shared across every
+    scheduler of the same (model, dispatch) — same caching rationale as
+    :func:`_prefill_fn`.  Sharing matters for serving: schedulers are
+    rebuilt on every cold start and prewarm, and a per-scheduler
+    ``jax.jit`` closure both recompiled the step on each fresh
+    instance's first generation (~seconds of on-path latency that no
+    amount of pre-provisioning could hide) and leaked one pinned
+    executable per instance lifetime into the global pjit cache."""
+    def step(params, cache, tok, pos, seed, temp):
+        logits, cache = model.decode_step(params, cache, tok, pos)
+        nxt = sample_tokens(logits[:, -1, :], seed, pos + 1, temp)
+        return nxt[:, None], cache
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=16)
+def _join_fn(model, fingerprint):
+    """Jitted slot-merge (B=1 prefilled cache -> batch row ``slot``),
+    shared like :func:`_step_fn`.  Top-level keys distinguish the
+    stacked pattern groups ('s*': leaves are (n_units, B, ...)) from
+    tail layers ('t*': leaves are (B, ...))."""
+    def join(cache, one, slot):
+        out = {}
+        for k, big in cache.items():
+            ax = 1 if k.startswith("s") else 0
+            out[k] = jax.tree.map(
+                lambda b, s, _ax=ax: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), slot, axis=_ax), big, one[k])
+        return out
+    return jax.jit(join)
+
+
 class DecodeScheduler:
     """Continuous-batching decode over one slotted KV cache.
 
@@ -187,7 +221,8 @@ class DecodeScheduler:
     """
 
     def __init__(self, model, params: PyTree, *, n_slots: int = 8,
-                 cache_len: int = 256):
+                 cache_len: int = 256,
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if cache_len < 2:
@@ -210,42 +245,23 @@ class DecodeScheduler:
         # the dispatch fingerprint this scheduler's jitted prefill/step
         # bake in (cheap: no capability probes)
         self._fingerprint = ops.registry.fingerprint()
-        self._prefill = _prefill_fn(model, self._fingerprint)
-        # per-instance lambda closures -> each scheduler owns its pjit
-        # cache entry, traced under the current registry resolution
+        # shared per (model, registry resolution) — a fresh scheduler
+        # (cold start, prewarm) reuses the already-compiled executables
         # (never a bound method: those share jax's global cache by
         # (__func__, __self__) equality — R5)
-        self._step = jax.jit(
-            lambda p, c, tok, pos, seed, temp:
-            self._step_impl(p, c, tok, pos, seed, temp))
-        self._join_cache = jax.jit(
-            lambda cache, one, slot:
-            self._join_cache_impl(cache, one, slot))
+        self._prefill = _prefill_fn(model, self._fingerprint)
+        self._step = _step_fn(model, self._fingerprint)
+        self._join_cache = _join_fn(model, self._fingerprint)
         # counters
         self.steps = 0
         self.max_occupancy = 0
         self.joined = 0
-
-    # -------------------------------------------------------- jitted kernels
-    def _step_impl(self, params, cache, tok, pos, seed, temp):
-        """One batched decode step over every slot (occupied or not) +
-        per-slot sampling — a single compile shared across occupancy."""
-        logits, cache = self.model.decode_step(params, cache, tok, pos)
-        nxt = sample_tokens(logits[:, -1, :], seed, pos + 1, temp)
-        return nxt[:, None], cache
-
-    def _join_cache_impl(self, cache, one, slot):
-        """Write a B=1 prefilled cache into batch row ``slot`` of the
-        slotted cache.  Top-level keys distinguish the stacked pattern
-        groups ('s*': leaves are (n_units, B, ...)) from tail layers
-        ('t*': leaves are (B, ...))."""
-        out = {}
-        for k, big in cache.items():
-            ax = 1 if k.startswith("s") else 0
-            out[k] = jax.tree.map(
-                lambda b, s, _ax=ax: jax.lax.dynamic_update_slice_in_dim(
-                    b, s.astype(b.dtype), slot, axis=_ax), big, one[k])
-        return out
+        m = metrics_mod.resolve(metrics)
+        # shared across all schedulers of a platform: occupancy/steps
+        # aggregate over instances (the decode capacity the node runs)
+        self._m_steps = m.counter("decode/steps")
+        self._m_joined = m.counter("decode/joined")
+        self._m_occ = m.gauge("decode/occupancy")
 
     # ------------------------------------------------------------ public API
     def generate(self, spec: GenerateSpec, *,
@@ -328,6 +344,8 @@ class DecodeScheduler:
             self._temp[slot] = np.float32(req.spec.temperature)
             self.joined += 1
             self.max_occupancy = max(self.max_occupancy, len(self._slots))
+            self._m_joined.inc()
+            self._m_occ.set(len(self._slots))
 
     def _fail_locked(self, e: BaseException):
         """Abort every resident request with ``e`` (caller holds the
@@ -392,6 +410,8 @@ class DecodeScheduler:
                         req.done = True
                         del self._slots[slot]
                         self._free.append(slot)
+                self._m_steps.inc()
+                self._m_occ.set(len(self._slots))
                 self._stepping = False
                 self._cv.notify_all()
 

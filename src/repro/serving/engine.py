@@ -28,7 +28,9 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import metrics as metrics_mod
 from repro.serving.api import GenerateSpec, Request, Response  # noqa: F401
+from repro.serving.autoscale import Autoscaler  # noqa: F401
 from repro.serving.decode import DecodeScheduler, reference_generate  # noqa: F401
 from repro.serving.policy import EvictionPolicy, make_policy
 from repro.serving.pool import FunctionInstance, InstancePool  # noqa: F401
@@ -51,7 +53,9 @@ class ServerlessPlatform:
                  cache_budget_bytes: Optional[int] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
-                 mesh_shape=None, rules=None):
+                 mesh_shape=None, rules=None,
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None,
+                 autoscale: Optional[Dict[str, Any]] = None):
         """builders: model_name -> () -> (model, example_batch).
 
         cache_budget_bytes: enable ONE node-local WeightCache shared by
@@ -71,13 +75,27 @@ class ServerlessPlatform:
         device; with the shared cache, keyed per shard) and serves warm
         requests from the mesh-sharded params.  ``4`` == ``(1, 4)``;
         rules defaults to the serving TP rules.
+
+        metrics: registry behind :meth:`metrics_snapshot`; defaults to a
+        *private* registry so each platform's snapshot is isolated from
+        other platforms (and stray components) in the process.
+
+        autoscale: when not None, build an
+        :class:`~repro.serving.autoscale.Autoscaler` over this
+        platform's pools with these kwargs (e.g.
+        ``dict(rps_per_instance=2.0, min_warm=1)``; ``{}`` for
+        defaults).  The autoscaler is attached to every Router this
+        platform creates; drive it with ``platform.autoscaler.start()``
+        (background ticks) or explicit ``tick()`` calls.
         """
         self.store = store
         self.strategy = strategy
+        self.metrics = metrics if metrics is not None \
+            else metrics_mod.MetricsRegistry()
         self.policy = policy if policy is not None \
             else make_policy(keep_alive_s)
         if cache is None and cache_budget_bytes is not None:
-            cache = WeightCache(cache_budget_bytes)
+            cache = WeightCache(cache_budget_bytes, metrics=self.metrics)
         self.cache = cache
         self.mesh_shape = mesh_shape
         self.pools: Dict[str, InstancePool] = {
@@ -89,20 +107,43 @@ class ServerlessPlatform:
                                cache=self.cache,
                                gen_slots=gen_slots,
                                gen_cache_len=gen_cache_len,
-                               mesh_shape=mesh_shape, rules=rules)
+                               mesh_shape=mesh_shape, rules=rules,
+                               metrics=self.metrics)
             for name, builder in builders.items()}
+        self.autoscaler: Optional[Autoscaler] = None
+        if autoscale is not None:
+            self.autoscaler = Autoscaler(self.pools, metrics=self.metrics,
+                                         **autoscale)
         self.last_router_stats = None      # RouterStats of the last replay
 
     def router(self, *, workers: int = 4,
                max_pending: Optional[int] = None) -> Router:
         """A live Router over this platform's pools (caller shuts down)."""
         return Router(self.pools, workers=workers, max_pending=max_pending,
-                      cache=self.cache)
+                      cache=self.cache, metrics=self.metrics,
+                      autoscaler=self.autoscaler)
 
     def cache_stats(self) -> Optional[CacheStats]:
         """Counters of the shared node-local WeightCache (None when
         serving cache-less)."""
         return self.cache.stats() if self.cache is not None else None
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """The scrapeable observability surface: every live instrument
+        (counters / gauges / histograms) plus point-in-time instance
+        states refreshed from the pools at snapshot time."""
+        for name, pool in self.pools.items():
+            st = pool.stats()
+            g = self.metrics.gauge
+            g(f"pool/{name}/instances").set(st.size)
+            g(f"pool/{name}/live").set(st.live)
+            g(f"pool/{name}/busy").set(st.busy)
+            g(f"pool/{name}/gen_active").set(st.gen_active)
+        if self.cache is not None:
+            cs = self.cache.stats()
+            self.metrics.gauge("weight_cache/bytes").set(cs.bytes_cached)
+            self.metrics.gauge("weight_cache/entries").set(cs.entries)
+        return self.metrics.snapshot()
 
     def sweep(self, logical_now: float) -> int:
         """Run keep-alive eviction across all pools (idle instances

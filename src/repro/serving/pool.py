@@ -37,7 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import analysis
+from repro import analysis, metrics as metrics_mod
 from repro.core.coldstart import ColdStartEngine, LoadResult
 from repro.serving.api import GenerateSpec, PoolStats
 from repro.serving.decode import (DecodeScheduler, GenResult, sample_first,
@@ -61,7 +61,8 @@ class FunctionInstance:
                  example_batch: Optional[Dict[str, jax.Array]] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
-                 mesh_shape=None, rules=None):
+                 mesh_shape=None, rules=None,
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
         """gen_slots / gen_cache_len: capacity of this container's
         continuous-batching DecodeScheduler — concurrent generation
         requests up to gen_slots share one slotted KV cache of
@@ -75,6 +76,7 @@ class FunctionInstance:
         ``serve_rules()``."""
         self.model = model
         self.model_name = model_name
+        self.example_batch = example_batch
         mesh = None
         if mesh_shape is not None:
             from repro.launch.mesh import make_serving_mesh
@@ -86,7 +88,9 @@ class FunctionInstance:
                                       strategy=strategy,
                                       io_workers=io_workers,
                                       chunk_bytes=chunk_bytes,
-                                      cache=cache, mesh=mesh, rules=rules)
+                                      cache=cache, mesh=mesh, rules=rules,
+                                      metrics=metrics)
+        self.metrics = metrics_mod.resolve(metrics)
         self.params: Optional[PyTree] = None
         self.last_load: Optional[LoadResult] = None
         self.gen_slots = int(gen_slots)
@@ -107,6 +111,21 @@ class FunctionInstance:
     @property
     def live(self) -> bool:
         return self.params is not None
+
+    def ensure_live(self) -> bool:
+        """Run the cold-start pipeline proactively (autoscaler prewarm):
+        load params using the warmup example batch, *off* any request.
+        Returns True when a load ran, False when already live."""
+        if self.live:
+            return False
+        if self.example_batch is None:
+            raise RuntimeError(
+                f"instance for {self.model_name!r} has no example_batch; "
+                "cannot prewarm without a representative input")
+        res = self.engine.load(self.example_batch)
+        self.params = res.params
+        self.last_load = res
+        return True
 
     def evict(self):
         self.params = None
@@ -135,7 +154,7 @@ class FunctionInstance:
                 if self.scheduler is None:
                     self.scheduler = DecodeScheduler(
                         self.model, self.params, n_slots=self.gen_slots,
-                        cache_len=self.gen_cache_len)
+                        cache_len=self.gen_cache_len, metrics=self.metrics)
         return self.scheduler
 
     def generate(self, spec: GenerateSpec, *,
@@ -209,7 +228,8 @@ class InstancePool:
                  instance_factory: Optional[Callable[[], Any]] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
-                 mesh_shape=None, rules=None):
+                 mesh_shape=None, rules=None,
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
         """builder: () -> (model, example_batch).  ``instance_factory``
         overrides container provisioning (tests / future remote pools);
         the default builds a warmed FunctionInstance.  ``cache``: one
@@ -251,6 +271,14 @@ class InstancePool:
         self._cold_starts = 0                      # guarded-by: _cv
         self._warm_hits = 0                        # guarded-by: _cv
         self._evictions = 0                        # guarded-by: _cv
+        self._prewarms = 0                         # guarded-by: _cv
+        self.metrics = metrics_mod.resolve(metrics)
+        # metric instruments are leaf locks: incrementing under _cv
+        # adds only a _cv -> instrument edge, never a cycle
+        self._m_cold = self.metrics.counter(f"pool/{model_name}/cold_starts")
+        self._m_warm = self.metrics.counter(f"pool/{model_name}/warm_hits")
+        self._m_evict = self.metrics.counter(f"pool/{model_name}/evictions")
+        self._m_prewarm = self.metrics.counter(f"pool/{model_name}/prewarms")
 
     def _default_factory(self):
         model, example = self._builder()
@@ -263,7 +291,8 @@ class InstancePool:
                                 gen_slots=self.gen_slots,
                                 gen_cache_len=self.gen_cache_len,
                                 mesh_shape=self.mesh_shape,
-                                rules=self.rules)
+                                rules=self.rules,
+                                metrics=self.metrics)
 
     # ------------------------------------------------------------ lifecycle
     def acquire(self, *, timeout: Optional[float] = None,
@@ -452,8 +481,10 @@ class InstancePool:
                 self._last_used.get(gid, 0.0), logical_now)
             if cold is True:
                 self._cold_starts += 1
+                self._m_cold.inc()
             elif cold is False:
                 self._warm_hits += 1
+                self._m_warm.inc()
             self._cv.notify_all()
 
     def release(self, inst, *, logical_now: float = 0.0,
@@ -469,8 +500,10 @@ class InstancePool:
                 self._last_used.get(id(inst), 0.0), logical_now)
             if cold is True:
                 self._cold_starts += 1
+                self._m_cold.inc()
             elif cold is False:
                 self._warm_hits += 1
+                self._m_warm.inc()
             self._cv.notify_all()
 
     def _evict_expired_locked(self, now: float) -> int:
@@ -485,6 +518,8 @@ class InstancePool:
                 inst.evict()
                 n += 1
         self._evictions += n
+        if n:
+            self._m_evict.inc(n)
         return n
 
     def sweep(self, now: float) -> int:
@@ -492,6 +527,73 @@ class InstancePool:
         number evicted.  Busy instances are never considered."""
         with self._cv:
             return self._evict_expired_locked(now)
+
+    # ----------------------------------------------------------- autoscaling
+    def prewarm(self, *, logical_now: Optional[float] = None) -> bool:
+        """Provision one warm instance *off the request path* (the
+        autoscaler's scale-out action).  Reuses a cold idle container
+        when one exists, else scales out up to ``max_instances``; the
+        cold-start pipeline then runs on the caller's thread while the
+        pool stays unlocked, and the warmed instance returns to the idle
+        list ready for the burst.  Returns True when an instance was
+        warmed, False when the pool had no capacity or was already fully
+        warm."""
+        created = False
+        with self._cv:
+            inst = next((i for i in self._idle if not i.live), None)
+            if inst is not None:
+                self._idle.remove(inst)
+                self._busy.append(inst)
+            elif len(self._instances) + self._creating \
+                    < self.max_instances:
+                self._creating += 1
+                created = True
+            else:
+                return False
+        if created:
+            inst = self._provision()
+        try:
+            ensure = getattr(inst, "ensure_live", None)
+            warmed = ensure() if ensure is not None else created
+        except BaseException:
+            # failed load: hand the (still cold) container back so a
+            # real request can retry the pipeline with its own batch
+            self.release(inst, logical_now=logical_now or 0.0)
+            raise
+        # cold=None: a prewarm is capacity provisioning, not a served
+        # request — it must not count as a cold start or warm hit
+        self.release(inst, logical_now=logical_now or 0.0)
+        if warmed or created:
+            with self._cv:
+                self._prewarms += 1
+            self._m_prewarm.inc()
+            return True
+        return False
+
+    def scale_in(self, keep: int, *, now: float = 0.0) -> int:
+        """Evict idle live instances until at most ``keep`` live
+        instances remain (the autoscaler's scale-in action).  Only
+        *idle* instances are touched: busy instances — including every
+        instance holding resident generations, which live on the busy
+        list until their last shared hold drops — are structurally out
+        of reach.  Returns the number evicted."""
+        keep = max(0, int(keep))
+        with self._cv:
+            excess = sum(1 for i in self._instances if i.live) - keep
+            n = 0
+            for inst in list(self._idle):
+                if excess <= 0:
+                    break
+                if not inst.live:
+                    continue
+                inst.evict()
+                self._last_used.pop(id(inst), None)
+                n += 1
+                excess -= 1
+            self._evictions += n
+            if n:
+                self._m_evict.inc(n)
+            return n
 
     # -------------------------------------------------------------- queries
     def any_live(self) -> bool:
@@ -509,4 +611,5 @@ class InstancePool:
                              cold_starts=self._cold_starts,
                              warm_hits=self._warm_hits,
                              evictions=self._evictions,
-                             gen_active=sum(self._gen_count.values()))
+                             gen_active=sum(self._gen_count.values()),
+                             prewarms=self._prewarms)

@@ -29,7 +29,7 @@ import numpy as np
 
 from concurrent.futures import InvalidStateError
 
-from repro import analysis
+from repro import analysis, metrics as metrics_mod
 from repro.serving.api import (AdmissionError, Request, RequestClass,
                                Response, RouterStats, UnknownModelError)
 from repro.serving.pool import InstancePool
@@ -52,7 +52,9 @@ class Router:
     def __init__(self, pools: Dict[str, InstancePool], *, workers: int = 4,
                  max_pending: Optional[int] = None,
                  acquire_timeout_s: float = 0.1,
-                 cache: Optional[Any] = None):
+                 cache: Optional[Any] = None,
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None,
+                 autoscaler: Optional[Any] = None):
         """``acquire_timeout_s``: how long a worker may block on a
         saturated pool before requeueing the request (to the tail of
         its class) and serving other queued work — keeps a slow cold
@@ -61,11 +63,25 @@ class Router:
 
         ``cache``: the node-local WeightCache behind this router's
         pools, exposed for observability (``cache_stats``); the pools
-        themselves consult it during cold starts."""
+        themselves consult it during cold starts.
+
+        ``metrics``: registry for the live instruments
+        (``router/submitted``, ``router/queue_depth``,
+        ``router/latency_s/<class>``, ``router/ttft_s``, ...);
+        falls back to the process default.
+
+        ``autoscaler``: optional
+        :class:`~repro.serving.autoscale.Autoscaler` — every admitted
+        request is reported to it (arrival-rate signal), and it reads
+        :meth:`queue_depth` back when sizing pools."""
         self.pools = pools
         self.max_pending = max_pending
         self.acquire_timeout_s = acquire_timeout_s
         self.cache = cache
+        self.metrics = metrics_mod.resolve(metrics)
+        self.autoscaler = autoscaler
+        if autoscaler is not None:
+            autoscaler.router = self
         self.stats = RouterStats()
         self._cv = analysis.make_condition("Router._cv")
         # (class, seq, Request, Future)
@@ -106,6 +122,7 @@ class Router:
             if self.max_pending is not None and \
                     len(self._heap) >= self.max_pending:
                 self.stats.rejected += 1
+                self.metrics.counter("router/rejected").inc()
                 raise AdmissionError(
                     f"queue at capacity ({self.max_pending} pending)")
             self.stats.submitted += 1
@@ -113,8 +130,19 @@ class Router:
                            (int(req.cls), next(self._seq), req, fut))
             self.stats.max_queue_depth = max(self.stats.max_queue_depth,
                                              len(self._heap))
+            depth = len(self._heap)
             self._cv.notify()
+        self.metrics.counter("router/submitted").inc()
+        self.metrics.gauge("router/queue_depth").set(depth)
+        if self.autoscaler is not None:
+            self.autoscaler.observe(req.model)
         return fut
+
+    def queue_depth(self) -> int:
+        """Pending (not yet dispatched) requests across all classes —
+        the backlog signal the autoscaler reads."""
+        with self._cv:
+            return len(self._heap)
 
     # ------------------------------------------------------------- dispatch
     def _worker(self):
@@ -125,6 +153,8 @@ class Router:
                 if not self._heap:
                     return                 # stopped and drained
                 _, _, req, fut = heapq.heappop(self._heap)
+                depth = len(self._heap)
+            self.metrics.gauge("router/queue_depth").set(depth)
             self._dispatch(req, fut)
 
     def _requeue(self, req: Request, fut: "Future[Response]"):
@@ -202,27 +232,51 @@ class Router:
                 self._in_flight += 1
                 self.stats.max_in_flight = max(self.stats.max_in_flight,
                                                self._in_flight)
+            self.metrics.gauge("router/in_flight").add(1)
             try:
                 result, info = service(inst, *rest)
             finally:
                 with self._cv:
                     self._in_flight -= 1
+                self.metrics.gauge("router/in_flight").add(-1)
             t_done = time.monotonic()
             release(inst, logical_now=req.t_logical, cold=info["cold"])
             inst = None
             with self._cv:
                 self.stats.completed += 1
-            _resolve(fut, result=Response(
+            resp = Response(
                 req_id=req.req_id, model=req.model, cold=info["cold"],
                 t_arrival=t_arr, t_done=t_done,
                 load_s=info["load_s"], infer_s=info["infer_s"],
                 utilization=info["utilization"],
                 queue_s=t_arr - req.t_submit, cls=req.cls,
-                **(extra(result, t_arr) if extra is not None else {})))
+                **(extra(result, t_arr) if extra is not None else {}))
+            self._record(resp)
+            _resolve(fut, result=resp)
         except BaseException as e:
             if inst is not None:
                 release(inst, logical_now=req.t_logical)
+            self.metrics.counter("router/errors").inc()
             _resolve(fut, exc=e)
+
+    def _record(self, resp: Response):
+        """Per-completion instruments.  latency_s is keyed by request
+        class (the Priority-Aware Scheduler's unit of SLO accounting);
+        ttft_s here is end-to-end *from submit* — queue wait plus the
+        service-side first-token time — because that is what a client's
+        SLO sees, unlike ``Response.ttft_s`` which starts at service."""
+        m = self.metrics
+        m.counter("router/completed").inc()
+        m.counter("router/cold" if resp.cold else "router/warm").inc()
+        m.histogram("router/queue_s").observe(resp.queue_s)
+        cls = resp.cls.name.lower() if resp.cls is not None else "unknown"
+        m.histogram(f"router/latency_s/{cls}").observe(resp.latency_s)
+        if resp.ttft_s is not None:
+            m.histogram("router/ttft_s").observe(resp.queue_s + resp.ttft_s)
+        if resp.tpot_s:
+            h = m.histogram("router/tpot_s")
+            for dt in resp.tpot_s:
+                h.observe(dt)
 
     def cache_stats(self):
         """CacheStats of the attached node-local WeightCache (None when

@@ -41,7 +41,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
-from repro import analysis
+from repro import analysis, metrics as metrics_mod
 
 # begin() outcomes
 HIT = "hit"      # leaves returned, reference taken
@@ -85,7 +85,8 @@ class WeightCache:
     and in-flight models may transiently overshoot).
     """
 
-    def __init__(self, budget_bytes: Optional[int] = None):
+    def __init__(self, budget_bytes: Optional[int] = None, *,
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
         if budget_bytes is not None and budget_bytes < 0:
             raise ValueError("budget_bytes must be >= 0 or None")
         # 0 -> unbounded, matching the platform's cache_budget_bytes
@@ -102,6 +103,13 @@ class WeightCache:
         self._waits = 0                          # guarded-by: _cv
         self._inserts = 0                        # guarded-by: _cv
         self._evictions = 0                      # guarded-by: _cv
+        m = metrics_mod.resolve(metrics)
+        # leaf-lock instruments: safe to inc while holding _cv
+        self._m_hits = m.counter("weight_cache/hits")
+        self._m_misses = m.counter("weight_cache/misses")
+        self._m_waits = m.counter("weight_cache/waits")
+        self._m_evictions = m.counter("weight_cache/evictions")
+        self._m_bytes = m.gauge("weight_cache/bytes")
 
     # --------------------------------------------------------- load protocol
     def begin(self, model: str, unit: str, shard: Hashable = 0
@@ -125,6 +133,7 @@ class WeightCache:
                     e = _Entry()
                     self._entries[key] = e
                     self._misses += 1
+                    self._m_misses.inc()
                     return LOAD, None
                 if e.loading:
                     waited = True
@@ -133,8 +142,10 @@ class WeightCache:
                 e.refs += 1
                 self._entries.move_to_end(key)
                 self._hits += 1
+                self._m_hits.inc()
                 if waited:
                     self._waits += 1
+                    self._m_waits.inc()
                 return HIT, e.leaves
 
     def complete(self, model: str, unit: str, leaves: Any, nbytes: int,
@@ -154,6 +165,7 @@ class WeightCache:
             self._inserts += 1
             self._entries.move_to_end(key)
             self._evict_locked()
+            self._m_bytes.set(self._bytes)
             self._cv.notify_all()
 
     def abort(self, model: str, unit: str, shard: Hashable = 0):
@@ -208,6 +220,8 @@ class WeightCache:
             del self._entries[key]
             self._bytes -= e.nbytes
             self._evictions += 1
+            self._m_evictions.inc()
+            self._m_bytes.set(self._bytes)
 
     # --------------------------------------------------------------- queries
     def __contains__(self, key: Tuple) -> bool:

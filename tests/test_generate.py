@@ -347,18 +347,26 @@ def test_unknown_model_typed_error_on_submitting_thread():
 # ---------------------------------------------------------------------------
 
 def test_scheduler_runs_interpret_kernels_bit_identical(dense, monkeypatch):
-    """Under REPRO_PALLAS=interpret the DecodeScheduler's jitted
-    prefill/step dispatch the *Pallas kernel bodies* (interpret mode) —
-    the registry records the dispatches — and the token stream stays
-    bit-identical to the serial reference traced under the same mode."""
+    """The DecodeScheduler's jitted prefill/step dispatch the *Pallas
+    kernel bodies* — the registry records the dispatches — and the
+    token stream stays bit-identical to the serial reference traced
+    under the same mode.  Default (and any non-TPU run): interpret
+    mode.  CI's workflow_dispatch tpu-pallas leg exports
+    REPRO_PALLAS=pallas on a TPU runner and the same assertions hold
+    against the real Mosaic lowerings."""
+    import os
+
     from repro.kernels import ops
 
     cfg, m, params = dense
-    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    mode = os.environ.get("REPRO_PALLAS")
+    if mode != "pallas":
+        mode = "interpret"
+    monkeypatch.setenv("REPRO_PALLAS", mode)
     before = ops.registry.dispatch_snapshot()
     sched = DecodeScheduler(m, params, n_slots=2, cache_len=CACHE_LEN)
-    assert sched.kernel_modes["flash_attention"] == "interpret"
-    assert sched.kernel_modes["decode_attention"] == "interpret"
+    assert sched.kernel_modes["flash_attention"] == mode
+    assert sched.kernel_modes["decode_attention"] == mode
     spec = GenerateSpec(prompt=_prompt(cfg, 5), n_new=4)
     got = sched.generate(spec).tokens
     want = reference_generate(m, params, spec.prompt, n_new=4,
@@ -366,8 +374,8 @@ def test_scheduler_runs_interpret_kernels_bit_identical(dense, monkeypatch):
     assert got == want
     after = ops.registry.dispatch_snapshot()
     for kern in ("flash_attention", "decode_attention"):
-        assert after.get((kern, "interpret"), 0) > \
-            before.get((kern, "interpret"), 0), kern
+        assert after.get((kern, mode), 0) > \
+            before.get((kern, mode), 0), kern
 
 
 def test_registry_auto_probes_and_forces(monkeypatch):

@@ -242,10 +242,13 @@ def _fake_platform(policy=None, *, max_instances=1, load_s=0.2,
                    registry=None):
     """ServerlessPlatform with its pools swapped for jax-free fakes —
     exercises run_trace's submission/sweep/clock logic in isolation."""
+    from repro.metrics import MetricsRegistry
     from repro.serving.engine import ServerlessPlatform
     platform = ServerlessPlatform.__new__(ServerlessPlatform)
     platform.policy = policy if policy is not None else NeverEvict()
     platform.cache = None
+    platform.metrics = MetricsRegistry()
+    platform.autoscaler = None
     platform.pools = {"m": fake_pool(max_instances=max_instances,
                                      policy=platform.policy,
                                      load_s=load_s, registry=registry)}

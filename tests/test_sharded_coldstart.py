@@ -368,6 +368,33 @@ def test_int8_sharded_bit_identical_to_whole_read(tmp_path, width):
 
 
 @needs_mesh
+def test_per_shard_transform_subrows_in_trace(tmp_path):
+    """Fused per-shard dequants are first-class trace rows: every
+    transformed shard emits a 'T' event tagged with its shard index,
+    the Gantt gains a Transform lane, and the new events stay off the
+    default busy-time stages so utilization is unchanged by them."""
+    cfg, model, store, batch = _deploy_int8(tmp_path)
+    mesh = make_serving_mesh((1, 4))
+    res = _engine(model, store, batch, mesh=mesh, name="q8").load(batch)
+    tr = res.trace
+
+    T = [e for e in tr.events if e.stage == "T"]
+    assert T, "per-shard transforms emitted no T sub-rows"
+    assert all(e.meta and "shard" in e.meta for e in T)
+    assert {e.meta["shard"] for e in T} == set(range(4))
+    assert all(e.t_end >= e.t_start for e in T)
+    # the transform lanes land on the units that actually dequantize
+    assert {e.layer for e in T} <= set(model.unit_names())
+    assert "block_000" in {e.layer for e in T}
+
+    # visible as its own Gantt row; excluded from default busy time
+    assert "Transform" in tr.render_gantt()
+    assert tr.summary()["work_T"] > 0.0
+    assert tr.busy_time(("T",)) > 0.0
+    assert tr.busy_time() == tr.busy_time(("L", "A", "E"))
+
+
+@needs_mesh
 def test_int8_second_cold_start_zero_read_per_shard(tmp_path):
     """With the shared WeightCache, the second quantized cold start is
     served entirely from cached shard payloads (raw int8 values + scale
