@@ -69,6 +69,14 @@ GATES: Dict[str, Dict[str, Tuple[str, float]]] = {
     "sharded_int8": {
         "sharded_int8/mesh4_vs_mesh1/speedup": ("floor", 1.5),
     },
+    "cluster": {
+        # the PR's headline invariants, baseline-independent: an N-node
+        # scale-out burst over peer exchange must beat N independent
+        # origin cold starts, and a second node cold-starting an
+        # already-landed model must not touch the origin at all
+        "cluster/peer_vs_origin/speedup": ("floor", 1.2),
+        "cluster/second_node/zero_origin_reads": ("floor", 1.0),
+    },
 }
 
 

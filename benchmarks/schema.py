@@ -5,7 +5,7 @@ downstream dashboard can no longer parse.
 
 The shape every artifact shares:
 
-    {"bench":  "<trace|generate|sharded|sharded_int8|slo|...>",
+    {"bench":  "<trace|generate|sharded|sharded_int8|slo|cluster|...>",
      "header": ["name", "<value-label>", "derived"],
      "rows":   [["<metric/path>", <number>, <number>], ...]}
 

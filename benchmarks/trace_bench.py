@@ -31,6 +31,15 @@ pre-provisioning warm instances off the arrival-rate slope
 per-class SLO attainment, plus the noscale/autoscale improvement ratio
 (the BENCH_slo.json artifact).
 
+``--workload cluster`` runs the multi-node bench (repro.cluster): an
+all-nodes simultaneous cold-start burst at ``--nodes`` {1, 2, 4} with
+peer-to-peer shard exchange over the fast intra-cluster link
+(``--cluster-bw-mbps``), against the same burst with cluster-blind
+nodes that each re-read the slow shared origin
+(``--cluster-origin-mbps``) — plus a two-node phase proving the second
+node's cold start is served entirely by its peer (zero origin reads).
+The BENCH_cluster.json artifact.
+
 ``--pallas {auto,pallas,interpret,ref}`` forces the kernel dispatch
 registry (default: auto — capability-probed per kernel).
 
@@ -48,6 +57,8 @@ Run directly for CI's bench-smoke job:
         --bandwidth-mbps 200 --json-out BENCH_sharded.json
     PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
         --workload slo --models smollm-360m --json-out BENCH_slo.json
+    PYTHONPATH=src:. python benchmarks/trace_bench.py --quick \
+        --workload cluster --nodes 1 2 4 --json-out BENCH_cluster.json
 """
 from __future__ import annotations
 
@@ -385,6 +396,139 @@ def slo_run(args):
     return rows
 
 
+def cluster_run(args):
+    """--workload cluster: multi-node scale-out bursts over the
+    peer-exchange tier vs cluster-blind origin re-reads.
+
+    Every platform is warmed once (jit compile) and flushed back to
+    cold before its measured burst, the origin store is re-wrapped at
+    ``--cluster-origin-mbps`` on a single shared channel (the slow
+    pipe all nodes contend on), and the intra-cluster link runs at
+    ``--cluster-bw-mbps`` with one channel per node.
+
+    Rows (name, value, derived):
+      cluster/nodes{n}/burst_ms     wall time of n simultaneous cold
+                                    starts (one per node) with peer
+                                    exchange on; derived = origin-store
+                                    reads the burst performed (the
+                                    cluster-wide single-flight should
+                                    hold it at one per shard regardless
+                                    of n)
+      cluster/nodes{n}/origin_burst_ms
+                                    the same burst with cluster-blind
+                                    nodes (peer exchange off): every
+                                    node re-reads the shared origin;
+                                    derived = origin reads (~n per
+                                    shard)
+      cluster/peer_vs_origin/speedup
+                                    origin_burst / burst at the largest
+                                    n — the paper-regime win of moving
+                                    scale-out bytes onto the cluster
+                                    link; derived = that n
+      cluster/second_node/zero_origin_reads
+                                    1.0 when a second node's cold start
+                                    of an already-landed model touched
+                                    the origin store zero times;
+                                    derived = its peer-read count
+      cluster/second_node/load_ms   that peer-served cold start's
+                                    pipeline time; derived = the
+                                    leader's origin-read load_ms
+    """
+    from repro.cluster import ClusterPlatform
+    from repro.store.store import BandwidthModel, WeightStore
+
+    rows = []
+    name = args.models[0]
+    cfg, model = common.get_model(name, args.quick)
+    store, root = common.deployed_store(args)
+    common.ensure_deployed(store, name, args.quick)
+    batch = common.make_batch(cfg)
+    builders = {name: (lambda: (model, batch))}
+
+    def build(n, peer):
+        # fresh BandwidthModel per platform: no token-bucket backlog
+        # leaks from one measured burst into the next
+        slow = WeightStore(root, BandwidthModel(args.cluster_origin_mbps,
+                                                0.2))
+        return ClusterPlatform(slow, builders, n_nodes=n,
+                               cluster_bw_mbps=args.cluster_bw_mbps,
+                               peer_exchange=peer,
+                               keep_alive_s=1e9, max_instances=1)
+
+    def origin_count(cp):
+        """Origin-store reads so far: the peer tier's counter when it
+        exists, else every cache miss was an origin read (cluster-blind
+        baseline)."""
+        if cp.nodes[0].source is not None:
+            return sum(nd.origin_reads() for nd in cp.nodes)
+        return sum(nd.metrics.counter("weight_cache/misses").value
+                   for nd in cp.nodes)
+
+    def burst(cp):
+        """Simultaneous cold start on every node (jit warmed, cluster
+        flushed): wall seconds, responses, origin-read count."""
+        router = cp.router(workers_per_node=2)
+        try:
+            # warm EVERY node's instance (each container jit-compiles
+            # its own forward) outside the timed window, then flush —
+            # eviction keeps the instance objects and their compiles
+            for i, nd in enumerate(cp.nodes):
+                router.submit_to(nd.node_id,
+                                 Request(req_id=-(i + 1), model=name,
+                                         batch=batch)).result()
+            cp.flush()
+            o0 = origin_count(cp)
+            t0 = time.monotonic()
+            futs = [router.submit_to(nd.node_id,
+                                     Request(req_id=i, model=name,
+                                             batch=batch))
+                    for i, nd in enumerate(cp.nodes)]
+            rs = [f.result() for f in futs]
+            wall = time.monotonic() - t0
+        finally:
+            router.shutdown()
+        origin = origin_count(cp) - o0
+        assert all(r.cold for r in rs), "burst must be all cold starts"
+        return wall, rs, origin
+
+    n_max = max(args.nodes)
+    peer_wall = {}
+    for n in sorted(args.nodes):
+        wall, _, origin = burst(build(n, True))
+        peer_wall[n] = wall
+        rows.append([f"cluster/nodes{n}/burst_ms", wall * 1e3,
+                     float(origin)])
+    wall, _, origin = burst(build(n_max, False))
+    rows.append([f"cluster/nodes{n_max}/origin_burst_ms", wall * 1e3,
+                 float(origin)])
+    rows.append(["cluster/peer_vs_origin/speedup",
+                 wall / peer_wall[n_max], float(n_max)])
+
+    # ---- second node cold-starts an already-landed model ------------------
+    cp = build(2, True)
+    router = cp.router(workers_per_node=2)
+    try:
+        for i, nd in enumerate(cp.nodes):
+            router.submit_to(nd.node_id,
+                             Request(req_id=-(i + 1), model=name,
+                                     batch=batch)).result()
+        cp.flush()
+        r0 = router.submit_to("node0", Request(req_id=0, model=name,
+                                               batch=batch)).result()
+        r1 = router.submit_to("node1", Request(req_id=1, model=name,
+                                               batch=batch)).result()
+    finally:
+        router.shutdown()
+    second = cp.node("node1")
+    assert r0.cold and r1.cold
+    rows.append(["cluster/second_node/zero_origin_reads",
+                 1.0 if second.origin_reads() == 0 else 0.0,
+                 second.peer_reads()])
+    rows.append(["cluster/second_node/load_ms", r1.load_s * 1e3,
+                 r0.load_s * 1e3])
+    return rows
+
+
 def _mesh_tag(args) -> str:
     """Row prefix AND json bench name of the --mesh sweep (one source
     so the artifact's bench field can't drift from its rows)."""
@@ -491,6 +635,11 @@ def run(args=None, n_invocations: int = 24, strategies=("pisel", "cicada"),
         common.print_csv(["name", "value", "derived"], rows)
         _write_json(args, rows, "slo")
         return rows
+    if getattr(args, "workload", "trace") == "cluster":
+        rows = cluster_run(args)
+        common.print_csv(["name", "value", "derived"], rows)
+        _write_json(args, rows, "cluster")
+        return rows
     rows = []
     store, _ = common.deployed_store(args)
     models = common.model_list(args)
@@ -535,6 +684,7 @@ def _write_json(args, rows, bench: str):
     if json_out:
         header = {"generate": ["name", "value", "derived"],
                   "slo": ["name", "value", "derived"],
+                  "cluster": ["name", "value", "derived"],
                   "sharded": ["name", "load_ms", "derived"],
                   "sharded_int8": ["name", "load_ms", "derived"]}.get(
             bench, ["name", "us_per_call", "derived"])
@@ -554,13 +704,23 @@ def main(argv=None):
     ap.add_argument("--json-out", default=None,
                     help="also write rows as JSON (CI artifact)")
     ap.add_argument("--workload", default="trace",
-                    choices=["trace", "generate", "slo"],
+                    choices=["trace", "generate", "slo", "cluster"],
                     help="trace: one-shot replay benches (default); "
                          "generate: continuous-batching TTFT/TPOT/"
                          "tokens-per-second benches (LM model required, "
                          "e.g. --models smollm-360m); slo: open-loop "
                          "10x-burst SLO attainment, autoscaler on vs "
-                         "off (LM model required)")
+                         "off (LM model required); cluster: multi-node "
+                         "scale-out bursts, peer shard exchange vs "
+                         "origin re-reads")
+    ap.add_argument("--nodes", type=int, nargs="+", default=[1, 2, 4],
+                    help="--workload cluster: node counts to sweep")
+    ap.add_argument("--cluster-bw-mbps", type=float, default=1000.0,
+                    help="--workload cluster: intra-cluster link "
+                         "bandwidth (one channel per node)")
+    ap.add_argument("--cluster-origin-mbps", type=float, default=20.0,
+                    help="--workload cluster: shared origin-store "
+                         "bandwidth (single channel: the slow pipe)")
     ap.add_argument("--slo-bandwidth-mbps", type=float, default=5.0,
                     help="--workload slo: simulated store bandwidth for "
                          "the SLO runs (low, so a cold start has a "

@@ -4,7 +4,10 @@ cold model, watch the pool scale out, keep-alive reclaim instances, and
 the router dispatch inference-first — then the generation-first path:
 overlapping GenerateSpec requests join one instance's
 continuous-batching decode scheduler (a cold generation request's first
-token is sampled inside the loading pipeline).
+token is sampled inside the loading pipeline) — and finally a two-node
+cluster scale-out: the second node cold-starts the model by streaming
+every shard from its peer over the fast intra-cluster link, touching
+the origin store zero times (repro.cluster).
 
     PYTHONPATH=src python examples/router_serving.py
 """
@@ -82,6 +85,40 @@ def main():
                   f"tokens={list(r.tokens)[:6]}...")
     inst = next(i for i in pool._instances if i.scheduler is not None)
     print("decode scheduler:", inst.scheduler.stats())
+
+    # ---- two-node cluster scale-out --------------------------------------
+    # A slow shared origin (20 MB/s) and a fast intra-cluster link:
+    # node0 cold-starts from the origin and publishes every shard to
+    # the placement table; node1's cold start of the same model streams
+    # all of its shards from node0's cache — zero origin reads.
+    from repro.cluster import ClusterPlatform                # noqa: E402
+
+    slow = WeightStore(store.root,
+                       BandwidthModel(bandwidth_mbps=20, latency_ms=0.2))
+    cluster = ClusterPlatform(slow, {"demo": (lambda: (model, batch))},
+                              n_nodes=2, cluster_bw_mbps=2000,
+                              keep_alive_s=1e9)
+    router = cluster.router(workers_per_node=2)
+    try:
+        r0 = router.submit_to("node0", Request(req_id=0, model="demo",
+                                               batch=batch)).result()
+        r1 = router.submit_to("node1", Request(req_id=1, model="demo",
+                                               batch=batch)).result()
+        # a routed (not pinned) warm request lands on a warm node
+        r2 = router.submit(Request(req_id=2, model="demo",
+                                   batch=batch)).result()
+    finally:
+        router.shutdown()
+    n0, n1 = cluster.nodes
+    print(f"cluster: node0 cold load={r0.load_s * 1e3:.1f}ms "
+          f"(origin reads={n0.origin_reads():.0f})")
+    print(f"         node1 cold load={r1.load_s * 1e3:.1f}ms "
+          f"(origin reads={n1.origin_reads():.0f}, "
+          f"peer reads={n1.peer_reads():.0f})  "
+          f"<- served entirely by its peer")
+    print(f"         warm request routed to {r2.node} "
+          f"(locality-aware placement)")
+    print("placement:", cluster.placement.snapshot())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Cluster-scale serving: multi-node platform with locality-aware
+routing and peer-to-peer shard exchange.
+
+The single-node stack (``repro.serving`` + ``repro.store`` +
+``repro.core``) scales out to N simulated nodes:
+
+  * :class:`~repro.cluster.platform.ClusterPlatform` — N
+    :class:`~repro.cluster.node.Node` s (each a private
+    ServerlessPlatform + WeightCache + metrics registry) over one
+    shared origin store;
+  * :class:`~repro.cluster.platform.ClusterRouter` — the locality-aware
+    front end: warm node > cache-resident node > least-loaded node;
+  * :class:`~repro.cluster.placement.PlacementTable` — cluster-wide
+    ``(model, unit, shard) -> holders`` map with origin-read leader
+    election (cluster-wide single-flight);
+  * :class:`~repro.cluster.peer.ClusterShardSource` — the peer-exchange
+    store tier each node's cold-start retrieval streams read through.
+"""
+from repro.cluster.node import Node
+from repro.cluster.peer import ClusterShardSource
+from repro.cluster.placement import ORIGIN, PEER, PlacementTable
+from repro.cluster.platform import ClusterPlatform, ClusterRouter
+
+__all__ = [
+    "ClusterPlatform", "ClusterRouter", "ClusterShardSource",
+    "Node", "PlacementTable", "ORIGIN", "PEER",
+]

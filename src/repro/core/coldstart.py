@@ -41,7 +41,7 @@ import numpy as np
 
 from repro import metrics as metrics_mod
 from repro.core import miniloader
-from repro.core.decoupler import WeightDecoupler
+from repro.core.decoupler import ShardSource, WeightDecoupler
 from repro.core.pipeline import PipelineTrace
 from repro.core.scheduler import PriorityAwareScheduler
 from repro.core.shards import ShardedUnitData, UnitShardPlan, plan_unit
@@ -72,7 +72,8 @@ class ColdStartEngine:
                  chunk_bytes: int = 1 << 20,
                  apply_dtype=None, cache: Optional[WeightCache] = None,
                  mesh=None, rules: Optional[ShardingRules] = None,
-                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None,
+                 source: Optional[ShardSource] = None):
         """apply_dtype: cast weights to this dtype at application time
         (None -> keep stored dtype).
 
@@ -80,6 +81,11 @@ class ColdStartEngine:
         streams consult it before issuing I/O, so scale-out cold starts
         of the same model single-flight every store read (per shard,
         under a mesh).
+
+        source: where cache-missing streams read their bytes (default:
+        the origin store) — a cluster node passes its peer-exchange
+        tier here so cold starts of already-landed models stream over
+        the intra-cluster link instead (requires a cache).
 
         mesh/rules: shard-granular cold start — retrieval fans out into
         one stream per mesh device and the assembled params live on the
@@ -94,6 +100,7 @@ class ColdStartEngine:
         self.chunk_bytes = chunk_bytes
         self.apply_dtype = apply_dtype
         self.cache = cache
+        self.source = source
         self.metrics = metrics_mod.resolve(metrics)
         if mesh is not None and mesh.size <= 1:
             mesh = None                    # degenerate: exact seed path
@@ -283,6 +290,8 @@ class ColdStartEngine:
                               io_workers=self.io_workers,
                               chunk_bytes=self.chunk_bytes, state=state,
                               cache=self.cache if strat.decouple else None,
+                              source=self.source if strat.decouple
+                              and self.cache is not None else None,
                               plan_fn=self._plan if sharded else None)
         trace.start()
 

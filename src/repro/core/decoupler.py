@@ -61,13 +61,44 @@ PyTree = Any
 Leaves = Dict[str, Tuple[np.ndarray, Optional[np.ndarray]]]
 
 
+class ShardSource:
+    """Where a stream's bytes come from when the local cache misses.
+
+    The default source is the origin store: :meth:`fetch` just invokes
+    the ``read_origin`` thunk the decoupler hands it.  A cluster tier
+    (``repro.cluster.peer.ClusterShardSource``) overrides it to consult
+    a cluster-wide placement table first and serve the payload from a
+    peer node's cache over the fast intra-cluster link — the origin
+    thunk then runs only when this node is elected the *cluster-wide*
+    single-flight leader for the key.
+
+    Contract with the decoupler (mirrors the WeightCache protocol):
+    ``fetch`` returns ``(payload, src)`` with ``src`` in {"origin",
+    "peer"}; after the payload is published to the local cache the
+    decoupler calls :meth:`publish`, and on any failure between fetch
+    and publish it calls :meth:`abort` (both no-ops here)."""
+
+    def fetch(self, model: str, unit: str, skey: Hashable, nbytes: int,
+              read_origin: Callable[[], Any], *,
+              gate=None, on_chunk: Optional[Callable[[int], None]] = None
+              ) -> Tuple[Any, str]:
+        return read_origin(), "origin"
+
+    def publish(self, model: str, unit: str, skey: Hashable):
+        pass
+
+    def abort(self, model: str, unit: str, skey: Hashable):
+        pass
+
+
 class WeightDecoupler:
     def __init__(self, store: WeightStore, model_name: str,
                  scheduler: PriorityAwareScheduler, trace: PipelineTrace,
                  *, io_workers: int = 4, chunk_bytes: int = 1 << 20,
                  state: Optional[PipelineState] = None,
                  cache: Optional[WeightCache] = None,
-                 plan_fn: Optional[Callable[[str], UnitShardPlan]] = None):
+                 plan_fn: Optional[Callable[[str], UnitShardPlan]] = None,
+                 source: Optional[ShardSource] = None):
         """``state``: a PipelineState whose condition variable this
         decoupler shares — stream completions then directly wake
         pipeline units blocked on that state (single-CV signaling, no
@@ -80,13 +111,23 @@ class WeightDecoupler:
         ``plan_fn``: unit -> UnitShardPlan — enables shard-granular
         retrieval (the engine supplies plans resolved from its mesh +
         sharding rules).  None keeps the seed's unit-granular streams.
+
+        ``source``: where a local-cache miss reads its bytes (see
+        :class:`ShardSource`) — a cluster peer tier substitutes the
+        fast intra-cluster link for the origin store here.  Requires a
+        cache: the source's publish step is what makes this node's
+        resident copy visible to peers.
         """
+        if source is not None and cache is None:
+            raise ValueError("a ShardSource requires a WeightCache "
+                             "(peers are served from this node's cache)")
         self.store = store
         self.model_name = model_name
         self.scheduler = scheduler
         self.trace = trace
         self.chunk_bytes = chunk_bytes
         self.cache = cache
+        self.source = source
         self.plan_fn = plan_fn
         self._plans: Dict[str, UnitShardPlan] = {}
         self._mesh_tag: Optional[str] = None
@@ -168,16 +209,40 @@ class WeightDecoupler:
             self._pool.submit(self._fetch_shard, u, s, st, data)
 
     # -------------------------------------------------- unit-granular path
+    @staticmethod
+    def _src_meta(src: str, meta: Optional[Dict[str, Any]] = None
+                  ) -> Optional[Dict[str, Any]]:
+        """Trace annotation of a stream's byte source: origin reads are
+        unmarked, cache hits carry ``cached``, peer-exchange transfers
+        carry ``peer``."""
+        if src == "cache":
+            meta = dict(meta or (), cached=True)
+        elif src == "peer":
+            meta = dict(meta or (), peer=True)
+        return meta
+
+    def _progress_cb(self, unit: str, total: int, shard: Hashable = 0):
+        """Per-chunk progress callback for source-driven transfers
+        (peer link): accumulates into the scheduler's stream state the
+        way _read_store / _read_shard do for origin reads."""
+        done = [0]
+        t = max(1, int(total))
+
+        def cb(n):
+            done[0] += n
+            self.scheduler.on_progress(unit, done[0], t, shard=shard)
+        return cb
+
     def _fetch(self, unit: str, st):
         try:
             self.scheduler.on_issue(unit)
             with self.cv:           # waiters recompute Algorithm 1 deadlines
                 self.cv.notify_all()
             t0 = time.monotonic()
-            leaves, cached = self._retrieve(unit, st)
+            leaves, src = self._retrieve(unit, st)
             self.trace.add_event("R", unit, t0, time.monotonic(),
-                                 meta={"cached": True} if cached else None)
-            self.scheduler.on_complete(unit, observed=not cached)
+                                 meta=self._src_meta(src))
+            self.scheduler.on_complete(unit, observed=(src == "origin"))
             with self.cv:
                 self.ready[unit] = leaves
                 self.cv.notify_all()
@@ -189,31 +254,48 @@ class WeightDecoupler:
                     self.state.errors.append(e)
                 self.cv.notify_all()
 
-    def _retrieve(self, unit: str, st) -> Tuple[Leaves, bool]:
+    def _retrieve(self, unit: str, st) -> Tuple[Leaves, str]:
         """One stream's bytes: cache hit / single-flight wait / leader
-        store read.  Returns (leaves, served_from_cache)."""
+        read through the source (origin store, or a cluster peer's
+        cache over the fast link).  Returns ``(leaves, src)`` with src
+        in {"cache", "origin", "peer"}."""
         if self.cache is None:
-            return self._read_store(unit, st), False
+            return self._read_store(unit, st), "origin"
         # A hit OR a wait on another load's read is "external" to this
         # pipeline's I/O: Algorithm 1 must not prioritize it (see
         # PriorityAwareScheduler.mark_external).  We cannot know which
         # before begin() may block, so flag optimistically and unflag
-        # on the LOAD outcome.
+        # only if this stream ends up doing a genuine origin read (a
+        # peer transfer is external too: suspending local device
+        # streams cannot speed up another node's cache).
         self.scheduler.mark_external(unit)
         status, leaves = self.cache.begin(self.model_name, unit)
         if status == LOAD:
-            self.scheduler.mark_external(unit, False)
+            def read_origin():
+                self.scheduler.mark_external(unit, False)
+                return self._read_store(unit, st)
+            src = "origin"
             try:
-                leaves = self._read_store(unit, st)
+                if self.source is None:
+                    leaves = read_origin()
+                else:
+                    leaves, src = self.source.fetch(
+                        self.model_name, unit, 0, st.nbytes, read_origin,
+                        gate=st.gate,
+                        on_chunk=self._progress_cb(unit, st.nbytes))
                 self.cache.complete(self.model_name, unit, leaves,
                                     st.nbytes)
             except BaseException:
                 self.cache.abort(self.model_name, unit)
+                if self.source is not None:
+                    self.source.abort(self.model_name, unit, 0)
                 raise
+            if self.source is not None:
+                self.source.publish(self.model_name, unit, 0)
             self._pin(unit, 0)
-            return leaves, False
+            return leaves, src
         self._pin(unit, 0)
-        return leaves, True
+        return leaves, "cache"
 
     def _read_store(self, unit: str, st) -> Leaves:
         raw = self.store.read_unit(
@@ -242,12 +324,10 @@ class WeightDecoupler:
             with self.cv:
                 self.cv.notify_all()
             t0 = time.monotonic()
-            payload, cached = self._retrieve_shard(unit, shard, st, data)
-            meta: Dict[str, Any] = {"shard": shard}
-            if cached:
-                meta["cached"] = True
+            payload, src = self._retrieve_shard(unit, shard, st, data)
+            meta = self._src_meta(src, {"shard": shard})
             self.trace.add_event("R", unit, t0, time.monotonic(), meta=meta)
-            self.scheduler.on_complete(unit, observed=not cached,
+            self.scheduler.on_complete(unit, observed=(src == "origin"),
                                        shard=shard)
             with self.cv:                   # unit fully read: admit next
                 self._reads_left[unit] -= 1
@@ -292,22 +372,36 @@ class WeightDecoupler:
             # no cache: gather straight into the unit's full host
             # leaves (the cache path materializes standalone slices —
             # its payloads outlive this load)
-            return self._read_shard(unit, shard, st, data), False
+            return self._read_shard(unit, shard, st, data), "origin"
         self.scheduler.mark_external(unit, shard=shard)
         status, payload = self.cache.begin(self.model_name, unit, skey)
         if status == LOAD:
-            self.scheduler.mark_external(unit, False, shard=shard)
+            def read_origin():
+                self.scheduler.mark_external(unit, False, shard=shard)
+                return self._read_shard(unit, shard, st)
+            src = "origin"
             try:
-                payload = self._read_shard(unit, shard, st)
+                if self.source is None:
+                    payload = read_origin()
+                else:
+                    payload, src = self.source.fetch(
+                        self.model_name, unit, skey, st.nbytes,
+                        read_origin, gate=st.gate,
+                        on_chunk=self._progress_cb(unit, st.nbytes,
+                                                   shard))
                 self.cache.complete(self.model_name, unit, payload,
                                     st.nbytes, skey)
             except BaseException:
                 self.cache.abort(self.model_name, unit, skey)
+                if self.source is not None:
+                    self.source.abort(self.model_name, unit, skey)
                 raise
+            if self.source is not None:
+                self.source.publish(self.model_name, unit, skey)
             self._pin(unit, skey)
-            return payload, False
+            return payload, src
         self._pin(unit, skey)
-        return payload, True
+        return payload, "cache"
 
     def _read_shard(self, unit: str, shard: int, st,
                     data: Optional[ShardedUnitData] = None):

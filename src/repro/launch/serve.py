@@ -21,6 +21,13 @@ is set automatically when unset.
 ``--pallas {auto,pallas,interpret,ref}`` forces the kernel dispatch
 registry for every jitted serving path (default: auto — capability-
 probed per kernel; see :mod:`repro.kernels.ops`).
+
+``--nodes N`` serves the trace from an N-node cluster
+(:mod:`repro.cluster`): a locality-aware front-end router places each
+invocation on the node already warm / cache-resident for the model,
+and scale-out cold starts stream weights from peer nodes over the
+intra-cluster link (``--cluster-bw-mbps``) instead of re-reading the
+shared origin store — at most one origin read per shard, cluster-wide.
 """
 from __future__ import annotations
 
@@ -124,6 +131,13 @@ def main(argv=None):
                     help="force the kernel dispatch registry for every "
                          "jitted serving path (default: capability-"
                          "probed auto; see repro.kernels.ops)")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="serve from an N-node cluster (repro.cluster): "
+                         "locality-aware routing + peer-to-peer shard "
+                         "exchange (1 = single-node platform)")
+    ap.add_argument("--cluster-bw-mbps", type=float, default=1000.0,
+                    help="--nodes N: intra-cluster link bandwidth, one "
+                         "channel per node (0 = unthrottled)")
     ap.add_argument("--bandwidth-mbps", type=float, default=400.0,
                     help="simulated store bandwidth per channel; with "
                          "--mesh N the store exposes N channels (one "
@@ -175,19 +189,34 @@ def main(argv=None):
 
     cache_budget = None if args.cache_budget_mb is None \
         else int(args.cache_budget_mb * 1e6)
-    platform = ServerlessPlatform(store, builders, strategy=args.strategy,
-                                  keep_alive_s=args.keep_alive,
-                                  max_instances=args.max_instances,
-                                  cache_budget_bytes=cache_budget,
-                                  gen_slots=args.gen_slots,
-                                  gen_cache_len=args.gen_cache_len,
-                                  mesh_shape=(1, args.mesh)
-                                  if args.mesh > 1 else None,
-                                  autoscale=dict(
-                                      rps_per_instance=args.rps_per_instance)
-                                  if args.autoscale else None)
-    if platform.autoscaler is not None:
-        platform.autoscaler.start()
+    is_cluster = args.nodes > 1
+    if is_cluster:
+        if args.autoscale:
+            raise SystemExit("--autoscale is a per-node policy; not "
+                             "supported with --nodes > 1")
+        from repro.cluster import ClusterPlatform
+        # the peer tier requires per-node caches: default unbounded
+        platform = ClusterPlatform(
+            store, builders, n_nodes=args.nodes,
+            cluster_bw_mbps=args.cluster_bw_mbps,
+            cache_budget_bytes=0 if cache_budget is None else cache_budget,
+            strategy=args.strategy, keep_alive_s=args.keep_alive,
+            max_instances=args.max_instances, gen_slots=args.gen_slots,
+            gen_cache_len=args.gen_cache_len,
+            mesh_shape=(1, args.mesh) if args.mesh > 1 else None)
+    else:
+        platform = ServerlessPlatform(
+            store, builders, strategy=args.strategy,
+            keep_alive_s=args.keep_alive,
+            max_instances=args.max_instances,
+            cache_budget_bytes=cache_budget,
+            gen_slots=args.gen_slots,
+            gen_cache_len=args.gen_cache_len,
+            mesh_shape=(1, args.mesh) if args.mesh > 1 else None,
+            autoscale=dict(rps_per_instance=args.rps_per_instance)
+            if args.autoscale else None)
+        if platform.autoscaler is not None:
+            platform.autoscaler.start()
 
     def make_batch(name):
         return example_batch(get_config(name, smoke=args.smoke))
@@ -239,33 +268,59 @@ def main(argv=None):
             print(f"cold TTFT: mean={ct.mean() * 1e3:.1f}ms "
                   f"(load {cl2.mean() * 1e3:.1f}ms — first token "
                   f"in-pipeline: {bool((ct < cl2).all())})")
-    if args.concurrency > 1:
+    if args.concurrency > 1 and not is_cluster:
         q = np.array([r.queue_s for r in responses])
         rs = platform.last_router_stats
         print(f"queueing: mean={q.mean() * 1e3:.1f}ms "
               f"max={q.max() * 1e3:.1f}ms  "
               f"max-in-flight={rs.max_in_flight}")
-    for name, ps in platform.pool_stats().items():
-        print(f"pool[{name}]: instances={ps.size} live={ps.live} "
-              f"cold={ps.cold_starts} warm={ps.warm_hits} "
-              f"evictions={ps.evictions}")
-    cs = platform.cache_stats()
-    if cs is not None:
-        print(f"weight-cache: hits={cs.hits} misses={cs.misses} "
-              f"deduped-reads={cs.waits} evictions={cs.evictions} "
-              f"resident={cs.bytes_cached / 1e6:.1f}MB "
-              f"hit-rate={cs.hit_rate:.0%}")
-    if platform.autoscaler is not None:
-        platform.autoscaler.stop()
+    if is_cluster:
+        served = np.array([r.node for r in responses])
+        for nd in platform.nodes:
+            ps = nd.platform.pool_stats()
+            print(f"node[{nd.node_id}]: "
+                  f"served={int((served == nd.node_id).sum())} "
+                  f"cold={sum(p.cold_starts for p in ps.values())} "
+                  f"warm={sum(p.warm_hits for p in ps.values())} "
+                  f"origin-reads={nd.origin_reads():.0f} "
+                  f"peer-reads={nd.peer_reads():.0f}")
+        snap = platform.cluster_snapshot()
+        agg = snap["cluster"]["counters"]
+        print(f"cluster: origin-reads="
+              f"{agg.get('cluster/origin_reads', 0):.0f} "
+              f"peer-reads={agg.get('cluster/peer_reads', 0):.0f} "
+              f"peer-bytes={agg.get('cluster/peer_bytes', 0) / 1e6:.1f}MB")
+        pl = snap["placement"]
+        print(f"placement: models={pl['models']} "
+              f"origin-elections={pl['origin_elections']} "
+              f"peer-referrals={pl['peer_referrals']}")
+    else:
+        for name, ps in platform.pool_stats().items():
+            print(f"pool[{name}]: instances={ps.size} live={ps.live} "
+                  f"cold={ps.cold_starts} warm={ps.warm_hits} "
+                  f"evictions={ps.evictions}")
+        cs = platform.cache_stats()
+        if cs is not None:
+            print(f"weight-cache: hits={cs.hits} misses={cs.misses} "
+                  f"deduped-reads={cs.waits} evictions={cs.evictions} "
+                  f"resident={cs.bytes_cached / 1e6:.1f}MB "
+                  f"hit-rate={cs.hit_rate:.0%}")
+        if platform.autoscaler is not None:
+            platform.autoscaler.stop()
     if args.metrics_out:
-        snap = platform.metrics_snapshot()
         import json
+        snap = platform.cluster_snapshot() if is_cluster \
+            else platform.metrics_snapshot()
         with open(args.metrics_out, "w") as f:
             json.dump(snap, f, indent=2)
-        print(f"metrics snapshot -> {args.metrics_out} "
-              f"({len(snap['counters'])} counters, "
-              f"{len(snap['gauges'])} gauges, "
-              f"{len(snap['histograms'])} histograms)")
+        if is_cluster:
+            print(f"cluster snapshot -> {args.metrics_out} "
+                  f"({snap['n_nodes']} nodes)")
+        else:
+            print(f"metrics snapshot -> {args.metrics_out} "
+                  f"({len(snap['counters'])} counters, "
+                  f"{len(snap['gauges'])} gauges, "
+                  f"{len(snap['histograms'])} histograms)")
     return responses
 
 

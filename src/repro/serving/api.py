@@ -90,6 +90,8 @@ class Response:
     tokens: Optional[Any] = None         # (n,) int array of emitted ids
     ttft_s: Optional[float] = None       # service start -> first token
     tpot_s: Optional[List[float]] = None  # inter-token intervals (n-1)
+    node: Optional[str] = None           # serving node id (cluster routing;
+                                         # None on a single-node platform)
 
     @property
     def latency_s(self) -> float:

@@ -55,7 +55,8 @@ class ServerlessPlatform:
                  gen_slots: int = 8, gen_cache_len: int = 256,
                  mesh_shape=None, rules=None,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
-                 autoscale: Optional[Dict[str, Any]] = None):
+                 autoscale: Optional[Dict[str, Any]] = None,
+                 source=None):
         """builders: model_name -> () -> (model, example_batch).
 
         cache_budget_bytes: enable ONE node-local WeightCache shared by
@@ -87,6 +88,10 @@ class ServerlessPlatform:
         defaults).  The autoscaler is attached to every Router this
         platform creates; drive it with ``platform.autoscaler.start()``
         (background ticks) or explicit ``tick()`` calls.
+
+        source: ShardSource wired into every pool's cold-start
+        retrieval streams — a cluster Node passes its peer-exchange
+        tier here (see :mod:`repro.cluster`); requires a cache.
         """
         self.store = store
         self.strategy = strategy
@@ -97,6 +102,7 @@ class ServerlessPlatform:
         if cache is None and cache_budget_bytes is not None:
             cache = WeightCache(cache_budget_bytes, metrics=self.metrics)
         self.cache = cache
+        self.source = source
         self.mesh_shape = mesh_shape
         self.pools: Dict[str, InstancePool] = {
             name: InstancePool(name, builder, store, strategy=strategy,
@@ -108,7 +114,8 @@ class ServerlessPlatform:
                                gen_slots=gen_slots,
                                gen_cache_len=gen_cache_len,
                                mesh_shape=mesh_shape, rules=rules,
-                               metrics=self.metrics)
+                               metrics=self.metrics,
+                               source=source)
             for name, builder in builders.items()}
         self.autoscaler: Optional[Autoscaler] = None
         if autoscale is not None:

@@ -62,7 +62,8 @@ class FunctionInstance:
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
                  mesh_shape=None, rules=None,
-                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None,
+                 source=None):
         """gen_slots / gen_cache_len: capacity of this container's
         continuous-batching DecodeScheduler — concurrent generation
         requests up to gen_slots share one slotted KV cache of
@@ -89,7 +90,7 @@ class FunctionInstance:
                                       io_workers=io_workers,
                                       chunk_bytes=chunk_bytes,
                                       cache=cache, mesh=mesh, rules=rules,
-                                      metrics=metrics)
+                                      metrics=metrics, source=source)
         self.metrics = metrics_mod.resolve(metrics)
         self.params: Optional[PyTree] = None
         self.last_load: Optional[LoadResult] = None
@@ -229,13 +230,16 @@ class InstancePool:
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
                  mesh_shape=None, rules=None,
-                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None,
+                 source=None):
         """builder: () -> (model, example_batch).  ``instance_factory``
         overrides container provisioning (tests / future remote pools);
         the default builds a warmed FunctionInstance.  ``cache``: one
         node-local WeightCache shared by every instance of this pool
         (and, via the platform, across pools) — concurrent scale-out
         cold starts then single-flight each (unit, shard) store read.
+        ``source``: ShardSource for cache-missing retrieval streams
+        (the cluster peer-exchange tier; default: origin store).
         ``gen_slots``/``gen_cache_len``: per-instance DecodeScheduler
         capacity (concurrent generation residency / KV positions).
         ``mesh_shape``/``rules``: shard-granular cold starts (see
@@ -244,6 +248,7 @@ class InstancePool:
         self.policy = policy if policy is not None else NeverEvict()
         self.max_instances = max(1, int(max_instances))
         self.cache = cache
+        self.source = source
         self.gen_slots = int(gen_slots)
         self.gen_cache_len = int(gen_cache_len)
         self.mesh_shape = mesh_shape
@@ -292,7 +297,8 @@ class InstancePool:
                                 gen_cache_len=self.gen_cache_len,
                                 mesh_shape=self.mesh_shape,
                                 rules=self.rules,
-                                metrics=self.metrics)
+                                metrics=self.metrics,
+                                source=self.source)
 
     # ------------------------------------------------------------ lifecycle
     def acquire(self, *, timeout: Optional[float] = None,

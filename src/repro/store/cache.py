@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Any, Dict, Hashable, List, Optional, Tuple
+from typing import (Any, Callable, Dict, Hashable, List, Optional, Tuple)
 
 from repro import analysis, metrics as metrics_mod
 
@@ -86,13 +86,23 @@ class WeightCache:
     """
 
     def __init__(self, budget_bytes: Optional[int] = None, *,
-                 metrics: Optional[metrics_mod.MetricsRegistry] = None):
+                 metrics: Optional[metrics_mod.MetricsRegistry] = None,
+                 on_evict: Optional[
+                     Callable[[Tuple[str, str, Hashable]], None]] = None):
+        """``on_evict``: called with each evicted ``(model, unit,
+        shard)`` key, *outside* the cache lock (so the callback may
+        take other locks — e.g. a cluster placement table — without
+        creating a WeightCache._cv -> X lock-order edge).  The entry is
+        already gone when the callback runs; a concurrent ``begin`` of
+        the same key re-loads it, so consumers must treat the signal as
+        "may be stale", not "is absent forever"."""
         if budget_bytes is not None and budget_bytes < 0:
             raise ValueError("budget_bytes must be >= 0 or None")
         # 0 -> unbounded, matching the platform's cache_budget_bytes
         # knob (a literal zero-byte cache would evict every entry on
         # insert — never what a caller wants from "enable the cache")
         self.budget_bytes = budget_bytes or None
+        self.on_evict = on_evict
         self._cv = analysis.make_condition("WeightCache._cv")
         self._entries: "OrderedDict[Tuple[str, str, Hashable], _Entry]" \
             = OrderedDict()                      # guarded-by: _cv
@@ -148,6 +158,22 @@ class WeightCache:
                     self._m_waits.inc()
                 return HIT, e.leaves
 
+    def try_get(self, model: str, unit: str, shard: Hashable = 0
+                ) -> Optional[Any]:
+        """Non-blocking peek: the entry's leaves with a reference taken
+        (pair with :meth:`release`), or None when absent *or* loading.
+        Unlike :meth:`begin` this never promotes the caller to leader
+        and never waits — it is the peer-serving read (a remote node
+        asking "do you hold this shard right now?"): a miss must fall
+        back to its own source, not start a load on *this* cache."""
+        with self._cv:
+            e = self._entries.get((model, unit, shard))
+            if e is None or e.loading:
+                return None
+            e.refs += 1
+            self._entries.move_to_end((model, unit, shard))
+            return e.leaves
+
     def complete(self, model: str, unit: str, leaves: Any, nbytes: int,
                  shard: Hashable = 0):
         """Publish the leader's read; wakes all waiters.  The leader
@@ -164,9 +190,10 @@ class WeightCache:
             self._bytes += e.nbytes
             self._inserts += 1
             self._entries.move_to_end(key)
-            self._evict_locked()
+            evicted = self._evict_locked()
             self._m_bytes.set(self._bytes)
             self._cv.notify_all()
+        self._notify_evicted(evicted)
 
     def abort(self, model: str, unit: str, shard: Hashable = 0):
         """Leader failed: drop the placeholder so a waiter retries as
@@ -178,13 +205,14 @@ class WeightCache:
             self._cv.notify_all()
 
     def release(self, model: str, unit: str, shard: Hashable = 0):
-        """Drop one reference taken by begin()/complete()."""
+        """Drop one reference taken by begin()/complete()/try_get()."""
         with self._cv:
             e = self._entries.get((model, unit, shard))
             if e is None or e.loading:
                 return
             e.refs = max(0, e.refs - 1)
-            self._evict_locked()
+            evicted = self._evict_locked()
+        self._notify_evicted(evicted)
 
     # --------------------------------------------- in-flight load registry
     def register_load(self, model: str):
@@ -200,20 +228,23 @@ class WeightCache:
                 self._inflight[model] = n
             else:
                 self._inflight.pop(model, None)
-            self._evict_locked()
+            evicted = self._evict_locked()
+        self._notify_evicted(evicted)
 
     # -------------------------------------------------------------- eviction
-    def _evict_locked(self):
-        """LRU over evictable entries.  Never touched: loading slots,
-        pinned entries (refs > 0), and units of models with a
-        registered in-flight load — the budget may transiently
-        overshoot while pins/loads are held; it is re-enforced on
-        release()/unregister_load()."""
+    def _evict_locked(self) -> List[Tuple[str, str, Hashable]]:
+        """LRU over evictable entries; returns the evicted keys (the
+        caller fires ``on_evict`` after dropping the lock).  Never
+        touched: loading slots, pinned entries (refs > 0), and units of
+        models with a registered in-flight load — the budget may
+        transiently overshoot while pins/loads are held; it is
+        re-enforced on release()/unregister_load()."""
+        evicted: List[Tuple[str, str, Hashable]] = []
         if self.budget_bytes is None:
-            return
+            return evicted
         for key in list(self._entries):
             if self._bytes <= self.budget_bytes:
-                return
+                return evicted
             e = self._entries[key]
             if e.loading or e.refs > 0 or key[0] in self._inflight:
                 continue
@@ -222,6 +253,14 @@ class WeightCache:
             self._evictions += 1
             self._m_evictions.inc()
             self._m_bytes.set(self._bytes)
+            evicted.append(key)
+        return evicted
+
+    def _notify_evicted(self, keys: List[Tuple[str, str, Hashable]]):
+        if self.on_evict is None:
+            return
+        for key in keys:
+            self.on_evict(key)
 
     # --------------------------------------------------------------- queries
     def __contains__(self, key: Tuple) -> bool:
@@ -255,6 +294,7 @@ class WeightCache:
 
     def clear(self):
         """Drop every unpinned, non-loading entry (tests / redeploys)."""
+        dropped = []
         with self._cv:
             for key in list(self._entries):
                 e = self._entries[key]
@@ -262,3 +302,5 @@ class WeightCache:
                     continue
                 del self._entries[key]
                 self._bytes -= e.nbytes
+                dropped.append(key)
+        self._notify_evicted(dropped)

@@ -90,6 +90,28 @@ class BandwidthModel:
         if delay > 0:
             time.sleep(delay)
 
+    def transfer(self, nbytes: int, *, channel: int = 0,
+                 chunk_bytes: int = 1 << 20,
+                 gate: Optional[threading.Event] = None,
+                 on_chunk: Optional[Callable[[int], None]] = None):
+        """Simulate moving ``nbytes`` over one channel of this link, in
+        suspendable chunks — the intra-cluster peer-exchange path: no
+        file underneath, just the wire cost of bytes already resident
+        on another node.  ``gate``: the stream's Algorithm-1 suspension
+        event (waited between chunks, like a store read); ``on_chunk``:
+        progress callback with each chunk's size."""
+        self.on_open()
+        done = 0
+        total = max(0, int(nbytes))
+        while done < total:
+            if gate is not None:
+                gate.wait()
+            n = min(int(chunk_bytes), total - done)
+            self.on_chunk(n, channel)
+            done += n
+            if on_chunk is not None:
+                on_chunk(n)
+
 
 # ---------------------------------------------------------------------------
 # tree <-> flat leaves

@@ -1,0 +1,493 @@
+"""Cluster-scale serving (repro.cluster): placement-table leader
+election (cluster-wide single-flight), peer-to-peer shard exchange with
+stale-referral fallback, cache-eviction -> placement-withdrawal wiring,
+locality-aware front-end routing, and the storm test the instrumented
+lock probe (REPRO_ANALYZE=1) runs in CI's analysis job."""
+import threading
+import time
+
+import pytest
+
+from repro.cluster import (ORIGIN, PEER, ClusterPlatform,
+                           ClusterShardSource, PlacementTable)
+from repro.serving.api import Request, UnknownModelError
+from repro.store.cache import LOAD, WeightCache
+from repro.store.store import WeightStore
+
+
+# ---------------------------------------------------------------------------
+# WeightCache: on-evict callback + try_get (the placement wiring's base)
+# ---------------------------------------------------------------------------
+
+def _put(c, model, unit, nbytes, shard=0):
+    status, _ = c.begin(model, unit, shard)
+    assert status == LOAD
+    c.complete(model, unit, {unit: nbytes}, nbytes, shard)
+    c.release(model, unit, shard)
+
+
+def test_on_evict_callback_reports_every_dropped_key():
+    evicted = []
+    c = WeightCache(budget_bytes=250, on_evict=evicted.append)
+    _put(c, "m", "u0", 100)
+    _put(c, "m", "u1", 100)
+    _put(c, "m", "u2", 100)          # 300 > 250: u0 is the LRU victim
+    assert evicted == [("m", "u0", 0)]
+    c.clear()                        # remaining entries dropped too
+    assert sorted(evicted) == [("m", "u0", 0), ("m", "u1", 0),
+                               ("m", "u2", 0)]
+
+
+def test_on_evict_callback_may_reenter_the_cache():
+    """Callbacks run outside the cache lock: a callback that calls back
+    into the cache (as the placement wiring's metrics do) must not
+    deadlock."""
+    seen = []
+
+    def cb(key):
+        seen.append((key, c.stats().entries))
+
+    c = WeightCache(budget_bytes=100, on_evict=cb)
+    _put(c, "m", "a", 80)
+    _put(c, "m", "b", 80)            # evicts a; cb re-enters via stats()
+    assert seen and seen[0][0] == ("m", "a", 0)
+
+
+def test_try_get_pins_skips_loading_and_misses():
+    c = WeightCache()
+    assert c.try_get("m", "absent") is None
+    st, _ = c.begin("m", "loading")
+    assert st == LOAD
+    assert c.try_get("m", "loading") is None    # in-flight: not servable
+    c.complete("m", "loading", {"w": 1}, 10)
+    c.release("m", "loading")
+    got = c.try_get("m", "loading")
+    assert got == {"w": 1}
+    # the peek took a reference: the entry survives budget pressure
+    # until released
+    c2 = WeightCache(budget_bytes=10, on_evict=lambda k: None)
+    _put(c2, "m", "u", 10)
+    assert c2.try_get("m", "u") is not None     # pinned now
+    _put(c2, "m", "v", 10)                      # pressure
+    assert ("m", "u") in c2
+    c2.release("m", "u")
+    _put(c2, "m", "w", 10)                      # unpinned -> evictable
+    assert ("m", "u") not in c2
+
+
+# ---------------------------------------------------------------------------
+# PlacementTable: cluster-wide single-flight
+# ---------------------------------------------------------------------------
+
+def test_placement_leader_election_then_peer_referrals():
+    t = PlacementTable()
+    mode, peer = t.begin_fetch("A", "m", "u")
+    assert (mode, peer) == (ORIGIN, None)
+    t.publish("A", "m", "u")
+    mode, peer = t.begin_fetch("B", "m", "u")
+    assert (mode, peer) == (PEER, "A")
+    t.publish("B", "m", "u")
+    assert sorted(t.locate("m", "u")) == ["A", "B"]
+    # a holder is never referred to itself when another holder exists
+    assert t.begin_fetch("A", "m", "u")[1] == "B"
+    t.drop("A", "m", "u")
+    t.drop("B", "m", "u")
+    assert t.locate("m", "u") == []
+    # last holder gone: next asker is elected leader again
+    assert t.begin_fetch("C", "m", "u")[0] == ORIGIN
+
+
+def test_placement_waiters_blocked_then_redirected_to_peer():
+    t = PlacementTable()
+    assert t.begin_fetch("A", "m", "u")[0] == ORIGIN
+    results = []
+
+    def waiter(node):
+        results.append((node, t.begin_fetch(node, "m", "u")))
+
+    threads = [threading.Thread(target=waiter, args=(n,))
+               for n in ("B", "C", "D")]
+    for th in threads:
+        th.start()
+    time.sleep(0.05)
+    assert results == []                 # all blocked on the leader
+    t.publish("A", "m", "u")
+    for th in threads:
+        th.join(timeout=5)
+    assert len(results) == 3
+    assert all(r == (PEER, "A") for _, r in results)
+    snap = t.snapshot()
+    assert snap["origin_elections"] == 1
+    assert snap["peer_referrals"] == 3
+
+
+def test_placement_abort_reelects_a_waiter():
+    t = PlacementTable()
+    assert t.begin_fetch("A", "m", "u")[0] == ORIGIN
+    got = []
+    th = threading.Thread(
+        target=lambda: got.append(t.begin_fetch("B", "m", "u")))
+    th.start()
+    time.sleep(0.05)
+    t.abort("A", "m", "u")               # leader's origin read failed
+    th.join(timeout=5)
+    assert got == [(ORIGIN, None)]       # waiter re-elected leader
+
+
+# ---------------------------------------------------------------------------
+# ClusterShardSource over fake peers (no jax)
+# ---------------------------------------------------------------------------
+
+class FakePeer:
+    """Node.serve_shard/end_serve contract over a plain dict."""
+
+    def __init__(self, node_id):
+        self.node_id = node_id
+        self.payloads = {}
+        self.serving = 0
+
+    def serve_shard(self, model, unit, skey=0):
+        p = self.payloads.get((model, unit, skey))
+        if p is not None:
+            self.serving += 1
+        return p
+
+    def end_serve(self, model, unit, skey=0):
+        self.serving -= 1
+
+
+def _mk_cluster_sources(n):
+    table = PlacementTable()
+    peers = {f"n{i}": FakePeer(f"n{i}") for i in range(n)}
+    sources = {nid: ClusterShardSource(nid, table, None, peers.get)
+               for nid in peers}
+    return table, peers, sources
+
+
+def test_nway_burst_does_one_origin_read_per_key():
+    """The acceptance invariant, isolated: N nodes fetch the same shard
+    concurrently; exactly one origin read happens, everyone else is
+    served by a peer."""
+    n = 6
+    table, peers, sources = _mk_cluster_sources(n)
+    origin_reads = []
+    srcs = {}
+    barrier = threading.Barrier(n)
+
+    def fetch(nid):
+        def read_origin():
+            origin_reads.append(nid)
+            time.sleep(0.02)             # a slow origin: waiters pile up
+            return {"w": nid}
+
+        barrier.wait()
+        payload, src = sources[nid].fetch("m", "u", 0, 100, read_origin)
+        if src == "origin":
+            peers[nid].payloads[("m", "u", 0)] = payload
+        sources[nid].publish("m", "u", 0)
+        srcs[nid] = src
+
+    threads = [threading.Thread(target=fetch, args=(nid,))
+               for nid in sources]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=10)
+    assert len(origin_reads) == 1
+    assert sorted(srcs.values()) == ["origin"] + ["peer"] * (n - 1)
+    assert all(p.serving == 0 for p in peers.values())   # pins released
+    assert len(table.locate("m", "u")) == n              # all published
+
+
+def test_stale_referral_falls_back_to_origin():
+    """The peer evicted between publish and our fetch: serve_shard
+    returns None, the dead holder is dropped, and the asker degrades to
+    an origin read."""
+    table, peers, sources = _mk_cluster_sources(2)
+    table.publish("n0", "m", "u")        # n0 claims to hold the key...
+    assert ("m", "u", 0) not in peers["n0"].payloads   # ...but evicted
+    payload, src = sources["n1"].fetch("m", "u", 0, 100,
+                                       lambda: {"w": "origin"})
+    assert src == "origin" and payload == {"w": "origin"}
+    assert table.locate("m", "u") == []  # stale holder repaired away
+    from repro import metrics as metrics_mod
+    assert metrics_mod.resolve(None).counter(
+        "cluster/stale_referrals").value >= 1
+
+
+def test_unknown_peer_id_is_treated_as_stale():
+    table, _, sources = _mk_cluster_sources(1)
+    table.publish("ghost", "m", "u")     # a node that can't be resolved
+    payload, src = sources["n0"].fetch("m", "u", 0, 100, lambda: "o")
+    assert src == "origin" and payload == "o"
+
+
+# ---------------------------------------------------------------------------
+# storm: placement + peer tier + caches under thread pressure.  Runs in
+# CI's analysis job under REPRO_ANALYZE=1 (instrumented locks) — the
+# merged static+observed lock graph must stay cycle-free.
+# ---------------------------------------------------------------------------
+
+def test_cluster_storm_under_contention():
+    n_nodes, n_keys, n_rounds = 3, 4, 6
+    table = PlacementTable()
+
+    class StormNode:
+        def __init__(self, nid):
+            self.node_id = nid
+            self.cache = WeightCache(on_evict=self._on_evict)
+
+        def _on_evict(self, key):
+            table.drop(self.node_id, *key)
+
+        def serve_shard(self, model, unit, skey=0):
+            return self.cache.try_get(model, unit, skey)
+
+        def end_serve(self, model, unit, skey=0):
+            self.cache.release(model, unit, skey)
+
+    nodes = {f"n{i}": StormNode(f"n{i}") for i in range(n_nodes)}
+    sources = {nid: ClusterShardSource(nid, table, None, nodes.get)
+               for nid in nodes}
+    origin_reads = []
+    origin_lock = threading.Lock()
+    errors = []
+
+    def worker(nid):
+        node, source = nodes[nid], sources[nid]
+        try:
+            for r in range(n_rounds):
+                for k in range(n_keys):
+                    unit = f"u{k}"
+                    st, leaves = node.cache.begin("m", unit)
+                    if st != LOAD:
+                        node.cache.release("m", unit)
+                        continue
+
+                    def read_origin(u=unit):
+                        with origin_lock:
+                            origin_reads.append((u, nid))
+                        return {"w": u}
+
+                    try:
+                        payload, src = source.fetch("m", unit, 0, 64,
+                                                    read_origin)
+                        node.cache.complete("m", unit, payload, 64)
+                        source.publish("m", unit, 0)
+                    except BaseException:
+                        node.cache.abort("m", unit)
+                        source.abort("m", unit, 0)
+                        raise
+                    node.cache.release("m", unit)
+                # eviction pressure: drop everything and re-fetch
+                node.cache.clear()
+        except BaseException as e:      # surface failures to the test
+            errors.append((nid, e))
+
+    threads = [threading.Thread(target=worker, args=(nid,))
+               for nid in nodes]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60)
+    assert not errors, errors
+    assert not any(th.is_alive() for th in threads)
+    # liveness held and the table is consistent: every key's recorded
+    # holders actually hold it (nothing points at evicted bytes)
+    for key, holders in [((f"u{k}"), table.locate("m", f"u{k}"))
+                         for k in range(n_keys)]:
+        for h in holders:
+            assert nodes[h].cache.try_get("m", key) is not None
+            nodes[h].cache.release("m", key)
+
+
+# ---------------------------------------------------------------------------
+# ClusterPlatform wiring that needs no model (empty builders)
+# ---------------------------------------------------------------------------
+
+def _empty_cluster(tmp_path, n=2, **kw):
+    return ClusterPlatform(WeightStore(str(tmp_path)), {}, n_nodes=n,
+                           cluster_bw_mbps=0.0, **kw)
+
+
+def test_router_places_by_load_when_no_locality(tmp_path):
+    cp = _empty_cluster(tmp_path, n=3)
+    router = cp.router()
+    try:
+        assert router.place("m").node_id == "node0"   # tie -> index
+        cp.node("node0").metrics.gauge("router/in_flight").add(5)
+        cp.node("node1").metrics.gauge("router/in_flight").add(2)
+        assert router.place("m").node_id == "node2"   # least loaded
+    finally:
+        router.shutdown()
+
+
+def test_router_prefers_cache_resident_node(tmp_path):
+    cp = _empty_cluster(tmp_path, n=2)
+    cp.placement.publish("node1", "m", "u0")
+    cp.placement.publish("node1", "m", "u1")
+    router = cp.router()
+    try:
+        assert router.place("m").node_id == "node1"
+        # load never outranks locality in the score tuple
+        cp.node("node1").metrics.gauge("router/in_flight").add(50)
+        assert router.place("m").node_id == "node1"
+    finally:
+        router.shutdown()
+
+
+def test_submit_unknown_model_raises_on_submitting_thread(tmp_path):
+    cp = _empty_cluster(tmp_path)
+    router = cp.router()
+    try:
+        with pytest.raises(UnknownModelError):
+            router.submit(Request(req_id=0, model="nope", batch={}))
+    finally:
+        router.shutdown()
+
+
+def test_node_eviction_withdraws_placement_entry(tmp_path):
+    """The satellite fix, end to end at the node layer: a cache
+    eviction on a node immediately drops its placement-table entry."""
+    cp = _empty_cluster(tmp_path, n=2, cache_budget_bytes=150)
+    node = cp.node("node0")
+    st, _ = node.cache.begin("m", "u0")
+    assert st == LOAD
+    node.cache.complete("m", "u0", {"w": 0}, 100)
+    node.source.publish("m", "u0", 0)
+    node.cache.release("m", "u0")
+    assert cp.placement.locate("m", "u0") == ["node0"]
+    st, _ = node.cache.begin("m", "u1")   # 200 > 150: u0 evicted
+    node.cache.complete("m", "u1", {"w": 1}, 100)
+    node.cache.release("m", "u1")
+    assert cp.placement.locate("m", "u0") == []
+    # a peer fetch for u0 now elects a fresh leader instead of a
+    # referral to the evicted copy
+    assert cp.placement.begin_fetch("node1", "m", "u0")[0] == ORIGIN
+
+
+def test_cluster_snapshot_aggregates_per_node_surfaces(tmp_path):
+    cp = _empty_cluster(tmp_path, n=2)
+    cp.node("node0").metrics.counter("cluster/origin_reads").inc(3)
+    cp.node("node1").metrics.counter("cluster/peer_reads").inc(2)
+    cp.node("node1").metrics.gauge("router/queue_depth").set(4)
+    cp.placement.publish("node0", "m", "u0")
+    snap = cp.cluster_snapshot()
+    assert snap["n_nodes"] == 2
+    assert set(snap["nodes"]) == {"node0", "node1"}
+    agg = snap["cluster"]["counters"]
+    assert agg["cluster/origin_reads"] == 3.0
+    assert agg["cluster/peer_reads"] == 2.0
+    assert snap["cluster"]["load"] == {"node0": 0.0, "node1": 4.0}
+    assert snap["placement"]["models"] == {"m": {"keys": 1, "copies": 1}}
+    # each node's entry is the full PR-7 surface, not a digest
+    assert "counters" in snap["nodes"]["node0"]
+    assert "gauges" in snap["nodes"]["node0"]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end with a real model (slow job)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def deployed(tmp_path_factory):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import transformer
+    from repro.models.api import get_config
+    from repro.store.store import deploy_model
+
+    d = tmp_path_factory.mktemp("store")
+    cfg = get_config("smollm-360m", smoke=True)
+    m = transformer.build(cfg)
+    store = WeightStore(str(d))
+    deploy_model(store, m, "smollm-360m", jax.random.key(0))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 8)),
+        jnp.int32)}
+    return store, m, cfg, batch
+
+
+def _cluster(deployed, n=2, **kw):
+    store, m, cfg, batch = deployed
+    kw.setdefault("keep_alive_s", 1e9)
+    return ClusterPlatform(store, {"smollm-360m": (lambda: (m, batch))},
+                           n_nodes=n, cluster_bw_mbps=2000.0, **kw), batch
+
+
+def _req(i, batch):
+    return Request(req_id=i, model="smollm-360m", batch=batch)
+
+
+@pytest.mark.slow
+def test_second_node_cold_start_is_peer_served(deployed):
+    """The headline acceptance: node1 cold-starts a model node0 already
+    landed — every shard streams from node0, zero origin reads."""
+    cp, batch = _cluster(deployed, n=2)
+    router = cp.router(workers_per_node=2)
+    try:
+        r0 = router.submit_to("node0", _req(0, batch)).result(timeout=120)
+        r1 = router.submit_to("node1", _req(1, batch)).result(timeout=120)
+    finally:
+        router.shutdown()
+    assert r0.cold and r0.node == "node0"
+    assert r1.cold and r1.node == "node1"
+    n0, n1 = cp.node("node0"), cp.node("node1")
+    assert n0.origin_reads() > 0 and n0.peer_reads() == 0
+    assert n1.origin_reads() == 0 and n1.peer_reads() > 0
+    # both caches now hold every unit; the table knows both copies
+    pl = cp.placement.snapshot()["models"]["smollm-360m"]
+    assert pl["copies"] == 2 * pl["keys"]
+
+
+@pytest.mark.slow
+def test_locality_routing_hits_warm_node(deployed):
+    cp, batch = _cluster(deployed, n=2)
+    router = cp.router(workers_per_node=2)
+    try:
+        r0 = router.submit_to("node1", _req(0, batch)).result(timeout=120)
+        # unpinned submissions follow the warm instance
+        rs = [router.submit(_req(i, batch)).result(timeout=60)
+              for i in range(1, 4)]
+    finally:
+        router.shutdown()
+    assert r0.cold
+    assert all(r.node == "node1" and not r.cold for r in rs)
+
+
+@pytest.mark.slow
+def test_concurrent_cold_burst_one_origin_read_per_shard(deployed):
+    """All nodes cold-start the same model simultaneously: placement
+    consistency under concurrent fetches, and at most one origin read
+    per (model, unit, shard) cluster-wide."""
+    cp, batch = _cluster(deployed, n=4)
+    router = cp.router(workers_per_node=2)
+    try:
+        futs = [router.submit_to(nd.node_id, _req(i, batch))
+                for i, nd in enumerate(cp.nodes)]
+        rs = [f.result(timeout=180) for f in futs]
+    finally:
+        router.shutdown()
+    assert all(r.cold for r in rs)
+    pl = cp.placement.snapshot()["models"]["smollm-360m"]
+    n_keys = pl["keys"]
+    assert n_keys > 0 and pl["copies"] == 4 * n_keys
+    total_origin = sum(nd.origin_reads() for nd in cp.nodes)
+    assert total_origin == n_keys          # exactly one per shard
+    assert sum(nd.peer_reads() for nd in cp.nodes) == 3 * n_keys
+
+
+@pytest.mark.slow
+def test_run_trace_through_the_cluster_front_end(deployed):
+    from repro.serving.trace import Invocation
+
+    cp, batch = _cluster(deployed, n=2, keep_alive_s=120.0)
+    trace = [Invocation(float(i), "smollm-360m", i) for i in range(4)]
+    rs = cp.run_trace(trace, lambda name: batch)
+    assert [r.req_id for r in rs] == [0, 1, 2, 3]
+    assert rs[0].cold and not rs[1].cold
+    assert all(r.node in ("node0", "node1") for r in rs)
+    snap = cp.cluster_snapshot()
+    assert snap["cluster"]["counters"]["router/completed"] == 4.0
