@@ -54,6 +54,12 @@ GATES: Dict[str, Dict[str, Tuple[str, float]]] = {
     "generate": {
         "generate/conc1/ttft_p50_ms": ("lower", DEFAULT_TOL),
         "generate/conc8/tok_s": ("higher", DEFAULT_TOL),
+        # quantized-resident serving (--compute-quant), baseline-
+        # independent: fused dequant must hold decode throughput, and
+        # int8 residency must buy a real memory win (quant <= 0.6x f32
+        # resident bytes, expressed as f32/quant >= 1.66)
+        "generate/quant/tok_s_vs_f32": ("floor", 0.9),
+        "generate/quant/resident_ratio": ("floor", 1.66),
     },
     "slo": {
         "slo/autoscale/ttft_p50_ms": ("lower", DEFAULT_TOL),

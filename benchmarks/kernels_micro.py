@@ -9,8 +9,19 @@ extent sizes the decoupler's placement lanes feed it (full leaf down to
 a 4-way shard slice), with the tile sizes
 :func:`repro.configs.shapes.wt_shard_tiles` assigns each size.
 
+``quant_matmul`` is timed at a decode shape (m=8) and a prefill shape
+(m=1024) — the two regimes the fused-dequant kernel serves under
+``compute_quant``.
+
+``--autotune`` additionally sweeps the tunable block sizes of
+``quant_matmul`` and ``weight_transform`` on this backend and persists
+the per-kernel winner into the JSON artifact (``"autotune"`` key,
+keyed by backend + sweep shape); a later run — or the serving process —
+re-applies it with :func:`repro.configs.shapes.load_autotuned`.
+
 ``--json-out BENCH_kernels.json`` emits the rows plus the registry's
-capability report — the CI bench-smoke artifact.
+capability report and per-mode dispatch counts — the CI bench-smoke
+artifact.
 """
 from __future__ import annotations
 
@@ -23,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.configs import shapes
 from repro.configs.shapes import kernel_blocks, wt_shard_tiles
 from repro.kernels import ops
 
@@ -128,19 +140,119 @@ def run(args=None):
                        w, s, bn=bn, bm=bm)), (w8, sc)), modes,
                ref_bytes=w8.nbytes)
 
+    # fused-dequant matmul at the two compute_quant regimes: decode
+    # (a few resident generations' activations against one weight) and
+    # prefill (prompt-length activation blocks)
+    K_qm, N_qm = 1024, 1024
+    w8 = jnp.asarray(r.integers(-127, 128, (K_qm, N_qm)), np.int8)
+    sc = jnp.asarray(np.abs(r.standard_normal(N_qm).astype(np.float32))
+                     + 1e-3)
+    for m, tag in ((8, "decode"), (1024, "prefill")):
+        xq = jnp.asarray(r.standard_normal((m, K_qm)), jnp.bfloat16)
+        _sweep(rows, f"quant_matmul_{tag}_m{m}",
+               lambda xq=xq: (jax.jit(lambda x, w, s: ops.quant_matmul(
+                   x, w, s)), (xq, w8, sc)), modes,
+               ref_bytes=w8.nbytes)
+
+    autotune = None
+    if getattr(args, "autotune", False):
+        autotune = autotune_blocks(rows)
+
     # TPU-target VMEM budgets (static analysis of the configured blocks)
     rows.append(["kernel/flash_vmem_kb", vmem_bytes_flash() / 1024, 0.0])
     common.print_csv(["name", "us_per_call", "derived_gbps"], rows)
 
     json_out = getattr(args, "json_out", None)
     if json_out:
+        obj = {"bench": "kernels",
+               "header": ["name", "us_per_call", "derived_gbps"],
+               "registry": ops.registry.describe(),
+               "dispatch_counts": {
+                   f"{k}/{m}": n for (k, m), n
+                   in ops.registry.dispatch_snapshot().items()},
+               "rows": rows}
+        if autotune is not None:
+            obj["autotune"] = autotune
         with open(json_out, "w") as f:
-            json.dump({"bench": "kernels",
-                       "header": ["name", "us_per_call", "derived_gbps"],
-                       "registry": ops.registry.describe(),
-                       "rows": rows}, f, indent=2)
+            json.dump(obj, f, indent=2)
         print(f"# wrote {json_out}")
     return rows
+
+
+# ---------------------------------------------------------------------------
+# per-backend block autotuning
+# ---------------------------------------------------------------------------
+
+# candidate grids per kernel: KernelBlocks field -> values.  Every value
+# divides the sweep shapes below, so interpret-mode timing exercises the
+# exact tiling (no padding) and a pallas-capable backend lowers each
+# candidate unchanged.
+_TUNE_GRID = {
+    "quant_matmul": {"qm_bm": (128, 256), "qm_bk": (256, 512),
+                     "qm_bn": (128, 256)},
+    "weight_transform": {"wt_bn": (256, 512), "wt_bm": (256, 512)},
+}
+_TUNE_SHAPES = {"quant_matmul": (256, 1024, 1024),     # (m, k, n)
+                "weight_transform": (2048, 1024)}      # (n, m)
+
+
+def autotune_blocks(rows, grid=None):
+    """Sweep the tunable block sizes on this backend; returns the
+    ``"autotune"`` artifact section (and appends a best-time row per
+    kernel).  Timed under the best *executing* mode — ``pallas`` when
+    the backend probes capable, else ``interpret`` (the interpreter
+    walks the real grid, so tile-count effects are visible even where
+    the pallas path cannot lower)."""
+    import itertools
+
+    backend = jax.default_backend()
+    grid = grid or _TUNE_GRID
+    out = {}
+    r = np.random.default_rng(1)
+    for kern, fields in grid.items():
+        mode = "pallas" if ops.registry.pallas_supported(kern) \
+            else "interpret"
+        if kern == "quant_matmul":
+            m, k, n = _TUNE_SHAPES[kern]
+            x = jnp.asarray(r.standard_normal((m, k)), jnp.bfloat16)
+            w = jnp.asarray(r.integers(-127, 128, (k, n)), np.int8)
+            s = jnp.asarray(np.abs(r.standard_normal(n)
+                                   .astype(np.float32)) + 1e-3)
+
+            def build(cand):
+                return (jax.jit(lambda x, w, s: ops.quant_matmul(
+                    x, w, s, bm=cand["qm_bm"], bk=cand["qm_bk"],
+                    bn=cand["qm_bn"])), (x, w, s))
+        else:
+            n, m = _TUNE_SHAPES[kern]
+            w = jnp.asarray(r.integers(-127, 128, (n, m)), np.int8)
+            s = jnp.asarray(np.abs(r.standard_normal(m)
+                                   .astype(np.float32)) + 1e-3)
+
+            def build(cand):
+                return (jax.jit(lambda w, s: ops.weight_transform(
+                    w, s, bn=cand["wt_bn"], bm=cand["wt_bm"])), (w, s))
+
+        names = list(fields)
+        best = None
+        ops.set_mode(mode)
+        try:
+            for combo in itertools.product(*(fields[f] for f in names)):
+                cand = dict(zip(names, combo))
+                f, fargs = build(cand)
+                t = timeit(f, *fargs)
+                if best is None or t < best[1]:
+                    best = (cand, t)
+        finally:
+            ops.set_mode(None)
+        out[kern] = {"backend": backend, "mode": mode,
+                     "shape": list(_TUNE_SHAPES[kern]),
+                     "winner": best[0], "us_per_call": best[1] * 1e6}
+        rows.append([f"kernel/autotune/{kern}_best_us", best[1] * 1e6,
+                     0.0])
+        print(f"# autotune {kern} [{backend}/{mode}]: {best[0]} "
+              f"({best[1] * 1e6:.1f}us)")
+    return out
 
 
 def main(argv=None):
@@ -151,6 +263,11 @@ def main(argv=None):
     ap.add_argument("--modes", nargs="+", default=None,
                     choices=["ref", "interpret", "pallas"],
                     help="restrict the dispatch-mode sweep")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep quant_matmul / weight_transform block "
+                         "sizes on this backend and persist the winner "
+                         "into the JSON artifact (reload with "
+                         "repro.configs.shapes.load_autotuned)")
     return run(ap.parse_args(argv))
 
 

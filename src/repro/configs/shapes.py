@@ -75,6 +75,9 @@ class KernelBlocks:
     rglru_bc: int = 256          # RG-LRU sequence chunk
     wt_bn: int = 256             # weight transform row tile
     wt_bm: int = 512             # weight transform column (lane) tile
+    qm_bm: int = 256             # quant matmul activation-row tile
+    qm_bk: int = 512             # quant matmul contraction tile
+    qm_bn: int = 256             # quant matmul output-column (lane) tile
 
 
 _KERNEL_BLOCKS = {
@@ -83,14 +86,68 @@ _KERNEL_BLOCKS = {
     # interpret mode executes the kernel body per grid cell in Python —
     # big grids are fine (cheap cells), big *tiles* are fine (vectorized
     # cells); the defaults hold, minus the decode tile (whose split-K
-    # scratch merge dominates interpret cost)
-    "interpret": KernelBlocks(decode_bs=128),
+    # scratch merge dominates interpret cost) and the quant-matmul tiles
+    # (its K-accumulation loop is the same hazard)
+    "interpret": KernelBlocks(decode_bs=128, qm_bm=128, qm_bk=256,
+                              qm_bn=128),
 }
+
+# Autotune overlay: benchmarks/kernels_micro.py --autotune sweeps block
+# candidates per (kernel shape x backend) and persists the winner into
+# BENCH_kernels.json; ``load_autotuned`` re-applies it here so dispatch
+# (and the capability probes, which lower at these shapes) pick up the
+# measured tiles instead of the static defaults.
+_TUNABLE = frozenset(f.name for f in dataclasses.fields(KernelBlocks))
+_AUTOTUNED: dict = {}               # profile -> {field: value}
+
+
+def set_autotuned(profile: str, overrides: dict) -> None:
+    """Overlay measured block winners onto one profile's defaults."""
+    if profile not in _KERNEL_BLOCKS:
+        raise ValueError(f"unknown profile {profile!r} "
+                         f"(one of {sorted(_KERNEL_BLOCKS)})")
+    bad = set(overrides) - _TUNABLE
+    if bad:
+        raise ValueError(f"unknown KernelBlocks fields {sorted(bad)}")
+    cur = dict(_AUTOTUNED.get(profile, {}))
+    cur.update({k: int(v) for k, v in overrides.items()})
+    _AUTOTUNED[profile] = cur
+
+
+def clear_autotuned(profile: Optional[str] = None) -> None:
+    if profile is None:
+        _AUTOTUNED.clear()
+    else:
+        _AUTOTUNED.pop(profile, None)
+
+
+def load_autotuned(artifact: dict, *, backend: str,
+                   profile: str = "tpu") -> dict:
+    """Apply the persisted winners from a BENCH_kernels.json object.
+
+    Winners are keyed ``{kernel: {"backend": ..., "winner": {...}}}``
+    under the artifact's ``autotune`` key; entries recorded on a
+    different backend are skipped (a CPU sweep must not retune the TPU
+    profile).  Returns the fields actually applied.
+    """
+    applied: dict = {}
+    for kern, entry in (artifact.get("autotune") or {}).items():
+        if entry.get("backend") != backend:
+            continue
+        winner = entry.get("winner") or {}
+        picks = {k: v for k, v in winner.items() if k in _TUNABLE}
+        if picks:
+            set_autotuned(profile, picks)
+            applied.update(picks)
+    return applied
 
 
 def kernel_blocks(profile: str = "tpu") -> KernelBlocks:
-    """Block-size profile for a dispatch mode ('tpu' | 'interpret')."""
-    return _KERNEL_BLOCKS[profile]
+    """Block-size profile for a dispatch mode ('tpu' | 'interpret'),
+    with any autotuned winners overlaid."""
+    kb = _KERNEL_BLOCKS[profile]
+    over = _AUTOTUNED.get(profile)
+    return dataclasses.replace(kb, **over) if over else kb
 
 
 def wt_shard_tiles(nbytes: int) -> Tuple[int, int]:

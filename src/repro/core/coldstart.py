@@ -51,6 +51,7 @@ from repro.core.units import (APPLIED, OUTPUT, SHARDED, PipelineContext,
 from repro.distributed.sharding import (ShardingRules, leaf_specs,
                                         param_specs, serve_rules)
 from repro.kernels import ops
+from repro.quant import QuantLeaf
 from repro.store.cache import WeightCache
 from repro.store.store import WeightStore, leaf_path_name, unflatten_unit
 
@@ -70,12 +71,21 @@ class ColdStartEngine:
     def __init__(self, model, model_name: str, store: WeightStore, *,
                  strategy: str = "cicada", io_workers: int = 4,
                  chunk_bytes: int = 1 << 20,
-                 apply_dtype=None, cache: Optional[WeightCache] = None,
+                 apply_dtype=None, compute_quant: bool = False,
+                 cache: Optional[WeightCache] = None,
                  mesh=None, rules: Optional[ShardingRules] = None,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
                  source: Optional[ShardSource] = None):
         """apply_dtype: cast weights to this dtype at application time
         (None -> keep stored dtype).
+
+        compute_quant: keep int8 extents *resident* — application skips
+        the ``weight_transform`` dequant and builds
+        :class:`~repro.quant.QuantLeaf` (int8 values + scale) leaves, so
+        params charge ~quarter the f32 bytes and forward passes dispatch
+        through the fused-dequant ``quant_matmul`` kernel.  Leaves the
+        store serves as plain floats (norms, gates, 1-D vectors) are
+        untouched.  Single-device serving only.
 
         cache: node-local shared WeightCache — decoupled retrieval
         streams consult it before issuing I/O, so scale-out cold starts
@@ -104,6 +114,12 @@ class ColdStartEngine:
         self.metrics = metrics_mod.resolve(metrics)
         if mesh is not None and mesh.size <= 1:
             mesh = None                    # degenerate: exact seed path
+        if compute_quant and mesh is not None:
+            raise ValueError(
+                "compute_quant serves int8 leaves in place on a single "
+                "device; mesh-sharded quantized residency is not "
+                "supported (shard plans describe the dequantized layout)")
+        self.compute_quant = compute_quant
         self.mesh = mesh
         self.rules = (rules if rules is not None else serve_rules()) \
             if mesh is not None else None
@@ -160,9 +176,17 @@ class ColdStartEngine:
         the transform) here and A only waits on them."""
         flat = {}
         put_names, put_arrs = [], []
+        qnames, qvals, qscales = [], [], []
         for name, (arr, scale) in leaves.items():
             if prefetched is not None and name in prefetched:
                 flat[name] = prefetched[name]
+            elif scale is not None and self.compute_quant:
+                # quantized residency: place the int8 values (at the
+                # logical leaf shape) + scale, skip weight_transform
+                qnames.append(name)
+                qvals.append(np.asarray(arr).reshape(
+                    self._leaf_shape(abstract, name)))
+                qscales.append(np.asarray(scale))
             elif scale is not None:                    # int8 extent
                 out_dt = self.apply_dtype or jnp.float32
                 a2 = jnp.asarray(arr).reshape(-1, arr.shape[-1])
@@ -178,6 +202,11 @@ class ColdStartEngine:
             else:
                 put_names.append(name)
                 put_arrs.append(arr)
+        if qnames:
+            bufs = jax.device_put(qvals + qscales)     # one batched transfer
+            nq = len(qnames)
+            for i, name in enumerate(qnames):
+                flat[name] = QuantLeaf(bufs[i], bufs[nq + i])
         if put_arrs:
             flat.update(zip(put_names, jax.device_put(put_arrs)))
         tree = unflatten_unit(abstract, flat)

@@ -52,6 +52,7 @@ from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
 from repro.kernels.weight_transform import weight_transform as _wt_pallas
+from repro.kernels.quant_matmul import quant_matmul as _qm_pallas
 
 NEG_INF = -1e30
 
@@ -533,10 +534,13 @@ def weight_transform(w, scale=None, *, out_dtype=jnp.bfloat16,
 
 
 def _probe_wt():
+    # probe at the active profile's tiles — what dispatch will actually
+    # lower — not hard-coded literals that can drift from KernelBlocks
+    kb = _blocks()
     _wt_pallas.lower(
-        jnp.zeros((128, 128), jnp.int8),
-        jnp.zeros((128,), jnp.float32),
-        out_dtype=jnp.bfloat16, bn=128, bm=128)
+        jnp.zeros((kb.wt_bn, kb.wt_bm), jnp.int8),
+        jnp.zeros((kb.wt_bm,), jnp.float32),
+        out_dtype=jnp.bfloat16, bn=kb.wt_bn, bm=kb.wt_bm)
 
 
 _register("weight_transform", _wt_pallas, _probe_wt)
@@ -546,3 +550,54 @@ def wt_shard_blocks(nbytes: int) -> Tuple[int, int]:
     """(bn, bm) for a per-shard weight_transform of ``nbytes`` — thin
     re-export so decoupler-side callers need only this module."""
     return wt_shard_tiles(nbytes)
+
+
+# ---------------------------------------------------------------------------
+# quant matmul (w8a16: int8-resident weights, dequant fused into the dot)
+# ---------------------------------------------------------------------------
+
+def quant_matmul(x, w, scale, *, out_dtype=None,
+                 bm: Optional[int] = None, bk: Optional[int] = None,
+                 bn: Optional[int] = None):
+    """Fused-dequant matmul over the trailing axis of ``x``.
+
+    x: (..., k) activations; w: (k, n) int8; scale: (n,) f32
+    per-column.  Leading axes of ``x`` are collapsed into the row dim
+    and restored on the output (..., n).  The ``ref`` fallback is the
+    dequant-then-matmul oracle — numerically identical to running
+    ``weight_transform`` at load and a plain einsum at compute, so the
+    quant-resident serving path degrades losslessly on backends without
+    Pallas."""
+    kb = _blocks()
+    bm = bm if bm is not None else kb.qm_bm
+    bk = bk if bk is not None else kb.qm_bk
+    bn = bn if bn is not None else kb.qm_bn
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    mode = registry.dispatch("quant_matmul")
+    if mode == "pallas":
+        out = _qm_pallas(x2, w, scale, out_dtype=out_dtype,
+                         bm=bm, bk=bk, bn=bn)
+    elif mode == "interpret":
+        # shrink tiles to divide each dim: no padded grid cells in the
+        # (slow) interpret loop
+        out = _qm_pallas(x2, w, scale, out_dtype=out_dtype,
+                         bm=_divisor_tile(bm, x2.shape[0]),
+                         bk=_divisor_tile(bk, w.shape[0]),
+                         bn=_divisor_tile(bn, w.shape[1]),
+                         interpret=True)
+    else:
+        out = ref.quant_matmul(x2, w, scale, out_dtype)
+    return out.reshape(lead + (w.shape[1],))
+
+
+def _probe_qm():
+    kb = _blocks()
+    _qm_pallas.lower(
+        jnp.zeros((kb.qm_bm, kb.qm_bk), jnp.float32),
+        jnp.zeros((kb.qm_bk, kb.qm_bn), jnp.int8),
+        jnp.zeros((kb.qm_bn,), jnp.float32),
+        out_dtype=jnp.float32, bm=kb.qm_bm, bk=kb.qm_bk, bn=kb.qm_bn)
+
+
+_register("quant_matmul", _qm_pallas, _probe_qm)

@@ -183,3 +183,23 @@ def weight_transform(w: jax.Array, scale: Optional[jax.Array], out_dtype
         return (w.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
                 ).astype(out_dtype)
     return w.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# quant matmul (w8a16: int8-resident weights, dequant fused at compute)
+# ---------------------------------------------------------------------------
+
+def quant_matmul(x: jax.Array, w: jax.Array, scale: jax.Array,
+                 out_dtype=None) -> jax.Array:
+    """Dequant-then-matmul — the semantic definition the fused kernel
+    must match: materialize the f32 weight exactly as the dequant-at-
+    load path does (``weight_transform``), then contract in f32.
+
+    x: (m, k) activations (any float dtype); w: (k, n) int8;
+    scale: (n,) f32 per-column.  Returns (m, n) in ``out_dtype``
+    (default: x.dtype).
+    """
+    wf = w.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), wf,
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)

@@ -131,6 +131,13 @@ def main(argv=None):
                     help="force the kernel dispatch registry for every "
                          "jitted serving path (default: capability-"
                          "probed auto; see repro.kernels.ops)")
+    ap.add_argument("--compute-quant", action="store_true",
+                    help="serve int8 weights in place: deploy models "
+                         "quantized (int8 values + per-column scales), "
+                         "keep them quantized-resident across cold "
+                         "starts (~quarter the f32 bytes) and run "
+                         "weight matmuls through the fused-dequant "
+                         "quant_matmul kernel (single device only)")
     ap.add_argument("--nodes", type=int, default=1,
                     help="serve from an N-node cluster (repro.cluster): "
                          "locality-aware routing + peer-to-peer shard "
@@ -161,6 +168,11 @@ def main(argv=None):
         from repro.kernels import ops
         ops.set_mode(None if args.pallas == "auto" else args.pallas)
 
+    if args.compute_quant and (args.mesh > 1 or args.nodes > 1):
+        raise SystemExit("--compute-quant serves int8 leaves in place on "
+                         "a single device; not supported with --mesh/"
+                         "--nodes")
+
     store_dir = args.store or tempfile.mkdtemp(prefix="cicada-store-")
     store = WeightStore(store_dir,
                         BandwidthModel(args.bandwidth_mbps, 0.2,
@@ -177,8 +189,10 @@ def main(argv=None):
                 f"({cfg.family.value}); try --models smollm-360m")
         if not store.has_model(name):
             print(f"deploying {name} "
-                  f"({cfg.param_count() / 1e6:.1f}M params) ...")
-            deploy_model(store, model, name, jax.random.key(args.seed))
+                  f"({cfg.param_count() / 1e6:.1f}M params"
+                  f"{', int8' if args.compute_quant else ''}) ...")
+            deploy_model(store, model, name, jax.random.key(args.seed),
+                         quant="int8" if args.compute_quant else None)
         builders[name] = (lambda m=model, c=cfg:
                           (m, example_batch(c)))
 
@@ -213,6 +227,7 @@ def main(argv=None):
             gen_slots=args.gen_slots,
             gen_cache_len=args.gen_cache_len,
             mesh_shape=(1, args.mesh) if args.mesh > 1 else None,
+            compute_quant=args.compute_quant,
             autoscale=dict(rps_per_instance=args.rps_per_instance)
             if args.autoscale else None)
         if platform.autoscaler is not None:

@@ -22,6 +22,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.distributed.sharding import constrain
 from repro.models import layers
 
@@ -67,8 +68,8 @@ def rglru_block(cfg, p: PyTree, x: jax.Array,
     """x: (B, S, d) -> y (B, S, d) [, (conv_state, h_state)]."""
     from repro.kernels import ops
     cd = cfg.compute_dtype
-    px = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(cd))
-    pg = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wgate"].astype(cd))
+    px = quant.einsum("bsd,dw->bsw", x, p["wx"], cd)
+    pg = jax.nn.gelu(quant.einsum("bsd,dw->bsw", x, p["wgate"], cd)
                      .astype(jnp.float32)).astype(cd)
     px, new_conv_state = layers.causal_conv1d(px, p["conv"], conv_state)
     px = constrain(px, "batch", "seq", "ff")
@@ -83,7 +84,7 @@ def rglru_block(cfg, p: PyTree, x: jax.Array,
         h = ops.rglru_scan(a, b)
         hS = None
     y = (h.astype(cd) * pg)
-    out = jnp.einsum("bsw,wd->bsd", y, p["wy"].astype(cd))
+    out = quant.einsum("bsw,wd->bsd", y, p["wy"], cd)
     out = constrain(out, "batch", "seq", "embed")
     if return_state:
         return out, (new_conv_state, hS)
@@ -95,14 +96,14 @@ def rglru_decode(cfg, p: PyTree, x: jax.Array, conv_state: jax.Array,
     """Single-token step.  x: (B, 1, d); h_state (B, W)."""
     from repro.kernels import ops
     cd = cfg.compute_dtype
-    px = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(cd))
-    pg = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wgate"].astype(cd))
+    px = quant.einsum("bsd,dw->bsw", x, p["wx"], cd)
+    pg = jax.nn.gelu(quant.einsum("bsd,dw->bsw", x, p["wgate"], cd)
                      .astype(jnp.float32)).astype(cd)
     px, conv_state = layers.causal_conv1d(px, p["conv"], conv_state)
     a, b = _gates(p, px)                                  # (B, 1, W)
     h_state = ops.rglru_step(h_state, a[:, 0], b[:, 0])
     y = h_state[:, None].astype(cd) * pg
-    out = jnp.einsum("bsw,wd->bsd", y, p["wy"].astype(cd))
+    out = quant.einsum("bsw,wd->bsd", y, p["wy"], cd)
     return out, conv_state, h_state
 
 

@@ -14,6 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.distributed.sharding import constrain
 
 PyTree = Any
@@ -112,9 +113,9 @@ def qkv_project(cfg, p: PyTree, x: jax.Array, positions: jax.Array,
                 *, rope: bool = True):
     """x: (B, S, D) -> q (B,S,H,dh), k/v (B,S,K,dh)."""
     cd = cfg.compute_dtype
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    q = quant.einsum("bsd,dhk->bshk", x, p["wq"], cd)
+    k = quant.einsum("bsd,dhk->bshk", x, p["wk"], cd)
+    v = quant.einsum("bsd,dhk->bshk", x, p["wv"], cd)
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     v = constrain(v, "batch", "seq", "kv_heads", None)
@@ -126,7 +127,8 @@ def qkv_project(cfg, p: PyTree, x: jax.Array, positions: jax.Array,
 
 def attn_out(cfg, p: PyTree, o: jax.Array) -> jax.Array:
     """o: (B, S, H, dh) -> (B, S, D)."""
-    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+    y = quant.einsum("bshk,hkd->bsd", o, p["wo"], cfg.compute_dtype,
+                     n_contract=2)
     return constrain(y, "batch", "seq", "embed")
 
 
@@ -194,15 +196,15 @@ def mlp_params(cfg, key: jax.Array, d_ff: Optional[int] = None) -> PyTree:
 def mlp_block(cfg, p: PyTree, x: jax.Array) -> jax.Array:
     cd = cfg.compute_dtype
     if cfg.act in ("silu", "geglu"):
-        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(cd))
-        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(cd))
+        g = quant.einsum("bsd,df->bsf", x, p["wg"], cd)
+        u = quant.einsum("bsd,df->bsf", x, p["wu"], cd)
         act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
         h = act(g) * u
     else:
-        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(cd))
+        u = quant.einsum("bsd,df->bsf", x, p["wu"], cd)
         h = jax.nn.gelu(u)
     h = constrain(h, "batch", "seq", "ff")
-    y = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(cd))
+    y = quant.einsum("bsf,fd->bsd", h, p["wd"], cd)
     return constrain(y, "batch", "seq", "embed")
 
 
@@ -216,6 +218,8 @@ def causal_conv1d(x: jax.Array, kernel: jax.Array,
     state: (B, W-1, C) prefix carried across calls (None -> zeros).
     Returns (y (B, S, C), new_state (B, W-1, C))."""
     B, S, C = x.shape
+    if quant.is_quant(kernel):           # conv taps are tiny: dequant whole
+        kernel = kernel.astype(jnp.float32)
     W = kernel.shape[0]
     if state is None:
         state = jnp.zeros((B, W - 1, C), x.dtype)
@@ -242,7 +246,7 @@ def embed_params(cfg, key: jax.Array) -> PyTree:
 
 
 def embed_lookup(cfg, p: PyTree, tokens: jax.Array) -> jax.Array:
-    x = p["tok"].astype(cfg.compute_dtype)[tokens]
+    x = quant.gather_rows(p["tok"], tokens, cfg.compute_dtype)
     return constrain(x, "batch", "seq", "embed")
 
 
@@ -256,10 +260,12 @@ def head_params(cfg, key: jax.Array) -> PyTree:
 def head_logits(cfg, params: PyTree, x: jax.Array) -> jax.Array:
     cd = cfg.compute_dtype
     if cfg.tie_embeddings:
+        # tied head contracts the table's *scaled* axis: not a
+        # per-column-scale matmul — dequant fallback
         w = params["embed"]["tok"].astype(cd).T
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
     else:
-        w = params["head"]["w"].astype(cd)
-    logits = jnp.einsum("bsd,dv->bsv", x, w)
+        logits = quant.einsum("bsd,dv->bsv", x, params["head"]["w"], cd)
     logits = constrain(logits, "batch", "seq", "vocab")
     if cfg.logit_softcap > 0:
         c = cfg.logit_softcap

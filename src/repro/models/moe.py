@@ -24,6 +24,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.distributed.sharding import constrain
 from repro.models import layers
 
@@ -98,15 +99,15 @@ def moe_block(cfg, p: PyTree, x: jax.Array
     x_e = constrain(x_e, "batch", "expert_act", None, None)  # (B, E, C, d)
 
     we = p["experts"]
-    h_g = jnp.einsum("becd,edf->becf", x_e, we["wg"].astype(cd))
-    h_u = jnp.einsum("becd,edf->becf", x_e, we["wu"].astype(cd))
+    h_g = quant.expert_einsum("becd,edf->becf", x_e, we["wg"], cd)
+    h_u = quant.expert_einsum("becd,edf->becf", x_e, we["wu"], cd)
     h = jax.nn.silu(h_g) * h_u
     # shard the expert hidden axis over `model` (the E axis cannot shard
     # when n_experts < mesh width): the wd contraction then runs locally
     # with a bf16 partial-sum reduce instead of XLA's f32 all-gather of
     # h to full width — the dominant collective in MoE training (§Perf)
     h = constrain(h, "batch", "expert_act", None, "ff")
-    y_e = jnp.einsum("becf,efd->becd", h, we["wd"].astype(cd))
+    y_e = quant.expert_einsum("becf,efd->becd", h, we["wd"], cd)
     y_e = y_e * g[..., None].astype(cd)                   # zero for unassigned
 
     # scatter-add back to token positions (combine)
@@ -126,10 +127,12 @@ def moe_block_dense_ref(cfg, p: PyTree, x: jax.Array) -> jax.Array:
     cd = cfg.compute_dtype
     w_te, _, _ = route(cfg, p["router"], x)               # (B, S, E)
     we = p["experts"]
-    h_g = jnp.einsum("bsd,edf->besf", x, we["wg"].astype(cd))
-    h_u = jnp.einsum("bsd,edf->besf", x, we["wu"].astype(cd))
+    h_g = quant.expert_einsum("bsd,edf->besf", x, we["wg"], cd,
+                              shared_x=True)
+    h_u = quant.expert_einsum("bsd,edf->besf", x, we["wu"], cd,
+                              shared_x=True)
     h = jax.nn.silu(h_g) * h_u
-    y_e = jnp.einsum("besf,efd->besd", h, we["wd"].astype(cd))
+    y_e = quant.expert_einsum("besf,efd->besd", h, we["wd"], cd)
     out = jnp.einsum("bse,besd->bsd", w_te.astype(cd), y_e)
     if cfg.dense_residual:
         out = out + layers.mlp_block(cfg, p["dense"], x)

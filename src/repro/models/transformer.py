@@ -21,6 +21,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.distributed.sharding import constrain
 from repro.models import griffin, layers, moe, ssm
 from repro.models.api import ArchConfig, Family
@@ -276,15 +277,15 @@ class LM:
         p = params["embed"]
         cd = cfg.compute_dtype
         if cfg.family == Family.AUDIO:
-            x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(cd),
-                           p["proj"].astype(cd))
+            x = quant.einsum("bsf,fd->bsd", batch["frames"].astype(cd),
+                             p["proj"], cd)
         elif cfg.family == Family.VLM:
-            img = jnp.einsum("bnf,fd->bnd", batch["img"].astype(cd),
-                             p["mm_proj"].astype(cd))
-            tok = p["tok"].astype(cd)[batch["tokens"]]
+            img = quant.einsum("bnf,fd->bnd", batch["img"].astype(cd),
+                               p["mm_proj"], cd)
+            tok = quant.gather_rows(p["tok"], batch["tokens"], cd)
             x = jnp.concatenate([img, tok], axis=1)
         else:
-            x = p["tok"].astype(cd)[batch["tokens"]]
+            x = quant.gather_rows(p["tok"], batch["tokens"], cd)
         return constrain(x, "batch", "seq", "embed")
 
     def _head(self, params: PyTree, x: jax.Array) -> jax.Array:
@@ -292,10 +293,14 @@ class LM:
         x = layers.apply_norm(cfg, params["final"]["norm"], x)
         cd = cfg.compute_dtype
         if cfg.tie_embeddings and not cfg.is_encoder:
+            # tied head contracts the table's *scaled* axis — a per-vocab
+            # scale cannot ride a (d, v) matmul, so dequant (QuantLeaf
+            # .astype is the transparent fallback) and transpose.
             w = params["embed"]["tok"].astype(cd).T
+            logits = jnp.einsum("bsd,dv->bsv", x, w)
         else:
-            w = params["final"]["head"]["w"].astype(cd)
-        logits = jnp.einsum("bsd,dv->bsv", x, w)
+            logits = quant.einsum("bsd,dv->bsv", x,
+                                  params["final"]["head"]["w"], cd)
         logits = constrain(logits, "batch", "seq", "vocab")
         if cfg.logit_softcap > 0:
             c = cfg.logit_softcap

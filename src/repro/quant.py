@@ -1,0 +1,142 @@
+"""Quantized-resident weight leaves (``compute_quant`` serving mode).
+
+PR 5 made int8 a first-class *storage* format: shards stream as int8
+values + per-column f32 scales and are dequanted at commit, so int8
+buys I/O, then gives the memory back.  Under ``compute_quant`` the
+cold-start apply path skips that dequant and keeps each quantized leaf
+resident as a :class:`QuantLeaf` — a registered pytree node holding the
+int8 values at the leaf's logical shape plus its scale vector — so an
+instance's params charge ~quarter the f32 bytes, and the model forward
+paths dispatch weight einsums through the fused-dequant
+``ops.quant_matmul`` kernel.
+
+Design notes:
+
+  * Registered pytree node: ``jnp.stack`` via ``jax.tree.map`` (model
+    assembly), ``jax.lax.scan`` over stacked layer blocks, jit
+    flattening and ``device_put`` all traverse the two children
+    independently — the stacked form slices back to per-layer
+    ``QuantLeaf``s inside a scan body with no special casing.
+  * ``.shape``/``.ndim`` mirror the logical (dequantized) leaf, so
+    structural checks against the abstract f32 tree still pass.
+  * ``.astype(dt)`` / ``__jax_array__`` dequantize — any model site not
+    explicitly dispatched (embedding tie, routers, conv taps, SSM
+    projections) degrades transparently to the dequant-then-einsum
+    reference instead of crashing on a non-array leaf.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantLeaf:
+    """One int8-resident weight: values at the logical leaf shape,
+    per-column f32 scales over the last axis."""
+
+    __slots__ = ("q", "scale")
+
+    def __init__(self, q, scale):
+        self.q = q
+        self.scale = scale
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- logical-array surface ---------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.q.shape)
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes: int8 values + f32 scales (~quarter of f32)."""
+        return self.q.nbytes + self.scale.nbytes
+
+    def astype(self, dtype):
+        """Dequantize to ``dtype`` — the transparent fallback for model
+        sites that expect a plain array (matches ``ref.weight_transform``
+        bit-for-bit: f32 multiply, then cast)."""
+        return (self.q.astype(jnp.float32)
+                * self.scale.astype(jnp.float32)).astype(dtype)
+
+    def __jax_array__(self):
+        return self.astype(jnp.float32)
+
+    def __repr__(self):
+        return (f"QuantLeaf(shape={self.shape}, "
+                f"scale={tuple(self.scale.shape)})")
+
+
+def is_quant(leaf) -> bool:
+    return isinstance(leaf, QuantLeaf)
+
+
+def einsum(eq: str, x, w, cd, *, n_contract: int = 1):
+    """Activation x weight contraction with fused-dequant dispatch.
+
+    Plain-array weights take the caller's einsum verbatim (the existing
+    f32 path, bit-identical).  A :class:`QuantLeaf` routes through
+    ``ops.quant_matmul``: the first ``n_contract`` axes of the weight
+    contract against the trailing axes of ``x``; remaining weight axes
+    are output columns.  The per-column scale (over the weight's last
+    axis) tiles across any middle output axes — column ``j`` of the
+    collapsed (K, N) weight is ``(j // last, j % last)`` row-major, so
+    ``tile(scale, N // last)`` reproduces the right per-column factor.
+    """
+    if not isinstance(w, QuantLeaf):
+        return jnp.einsum(eq, x, w.astype(cd))
+    from repro.kernels import ops
+    kdims = w.q.shape[:n_contract]
+    ndims = w.q.shape[n_contract:]
+    K = math.prod(kdims)
+    N = math.prod(ndims)
+    reps = N // w.scale.shape[0]
+    scale = jnp.tile(w.scale, reps) if reps > 1 else w.scale
+    xr = x.reshape(x.shape[:x.ndim - n_contract] + (K,))
+    out = ops.quant_matmul(xr.astype(cd), w.q.reshape(K, N), scale,
+                           out_dtype=cd)
+    return out.reshape(x.shape[:x.ndim - n_contract] + ndims)
+
+
+def expert_einsum(eq: str, x, w, cd, *, shared_x: bool = False):
+    """Per-expert contraction ``becd,edf->becf`` (and its ``wd`` twin
+    ``becf,efd->becd``): the expert axis is a batch dim shared by both
+    operands, so each expert's (d, f) slab goes through its own fused
+    quant_matmul; scales are shared across experts (per-column over the
+    weight's last axis).  ``shared_x``: every expert sees the same
+    activations (the dense-oracle form ``bsd,edf->besf``)."""
+    if not isinstance(w, QuantLeaf):
+        return jnp.einsum(eq, x, w.astype(cd))
+    from repro.kernels import ops
+    E = w.q.shape[0]
+    outs = [ops.quant_matmul((x if shared_x else x[:, e]).astype(cd),
+                             w.q[e], w.scale, out_dtype=cd)
+            for e in range(E)]
+    return jnp.stack(outs, axis=1)
+
+
+def gather_rows(w, idx, cd):
+    """Embedding lookup ``w[idx]`` — gather the int8 rows, then scale
+    (elementwise, so gather-then-dequant == dequant-then-gather
+    bit-for-bit, without materializing the full dequantized table)."""
+    if not isinstance(w, QuantLeaf):
+        return w.astype(cd)[idx]
+    return (w.q[idx].astype(jnp.float32)
+            * w.scale.astype(jnp.float32)).astype(cd)

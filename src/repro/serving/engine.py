@@ -53,7 +53,7 @@ class ServerlessPlatform:
                  cache_budget_bytes: Optional[int] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
-                 mesh_shape=None, rules=None,
+                 mesh_shape=None, rules=None, compute_quant: bool = False,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
                  autoscale: Optional[Dict[str, Any]] = None,
                  source=None):
@@ -76,6 +76,12 @@ class ServerlessPlatform:
         device; with the shared cache, keyed per shard) and serves warm
         requests from the mesh-sharded params.  ``4`` == ``(1, 4)``;
         rules defaults to the serving TP rules.
+
+        compute_quant: serve int8-deployed models *quantized-resident* —
+        cold starts keep the int8 values + scales as QuantLeaf params
+        (≈quarter the f32 residency) and forwards run through the
+        fused-dequant ``quant_matmul`` kernel.  Single-device only
+        (incompatible with mesh_shape).
 
         metrics: registry behind :meth:`metrics_snapshot`; defaults to a
         *private* registry so each platform's snapshot is isolated from
@@ -114,6 +120,7 @@ class ServerlessPlatform:
                                gen_slots=gen_slots,
                                gen_cache_len=gen_cache_len,
                                mesh_shape=mesh_shape, rules=rules,
+                               compute_quant=compute_quant,
                                metrics=self.metrics,
                                source=source)
             for name, builder in builders.items()}

@@ -61,7 +61,7 @@ class FunctionInstance:
                  example_batch: Optional[Dict[str, jax.Array]] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
-                 mesh_shape=None, rules=None,
+                 mesh_shape=None, rules=None, compute_quant: bool = False,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
                  source=None):
         """gen_slots / gen_cache_len: capacity of this container's
@@ -74,7 +74,11 @@ class FunctionInstance:
         ``(1, 4)`` or just ``4`` for 4-way model parallelism), one
         retrieval stream per device, and the instance serves warm
         requests from the mesh-sharded params.  rules defaults to
-        ``serve_rules()``."""
+        ``serve_rules()``.
+
+        compute_quant: int8-deployed models stay quantized-resident
+        (QuantLeaf params + fused-dequant matmuls) instead of being
+        dequantized at application — see ColdStartEngine."""
         self.model = model
         self.model_name = model_name
         self.example_batch = example_batch
@@ -89,6 +93,7 @@ class FunctionInstance:
                                       strategy=strategy,
                                       io_workers=io_workers,
                                       chunk_bytes=chunk_bytes,
+                                      compute_quant=compute_quant,
                                       cache=cache, mesh=mesh, rules=rules,
                                       metrics=metrics, source=source)
         self.metrics = metrics_mod.resolve(metrics)
@@ -229,7 +234,7 @@ class InstancePool:
                  instance_factory: Optional[Callable[[], Any]] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
-                 mesh_shape=None, rules=None,
+                 mesh_shape=None, rules=None, compute_quant: bool = False,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
                  source=None):
         """builder: () -> (model, example_batch).  ``instance_factory``
@@ -253,6 +258,7 @@ class InstancePool:
         self.gen_cache_len = int(gen_cache_len)
         self.mesh_shape = mesh_shape
         self.rules = rules
+        self.compute_quant = compute_quant
         self._builder = builder
         self._store = store
         self._strategy = strategy
@@ -297,6 +303,7 @@ class InstancePool:
                                 gen_cache_len=self.gen_cache_len,
                                 mesh_shape=self.mesh_shape,
                                 rules=self.rules,
+                                compute_quant=self.compute_quant,
                                 metrics=self.metrics,
                                 source=self.source)
 

@@ -227,3 +227,160 @@ def test_weight_transform_cast():
     o = wt_pallas(w, out_dtype=jnp.bfloat16, bn=16, bm=64, interpret=True)
     np.testing.assert_array_equal(np.asarray(o),
                                   np.asarray(w.astype(jnp.bfloat16)))
+
+
+# ---------------------------------------------------------------------------
+# quant matmul (fused dequant, w8a16)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.quant_matmul import quant_matmul as qm_pallas  # noqa: E402
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (8, 512, 1024, 8, 128, 256),      # decode: few rows, wide weight
+    (128, 256, 512, 64, 128, 128),    # prefill block
+    (100, 70, 33, 32, 32, 16),        # nothing divides: padding path
+    (17, 300, 5, 8, 64, 4),           # tiny N (stacked-gate leaves)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_vs_ref(m, k, n, bm, bk, bn, dtype):
+    x = arr(m, k, dtype=dtype)
+    w = jnp.asarray(R.integers(-127, 128, (k, n)), jnp.int8)
+    sc = jnp.abs(arr(n)) * 0.02 + 1e-4
+    o_ref = ref.quant_matmul(x, w, sc, dtype)
+    o_pal = qm_pallas(x, w, sc, out_dtype=dtype, bm=bm, bk=bk, bn=bn,
+                      interpret=True)
+    assert o_pal.shape == (m, n) and o_pal.dtype == dtype
+    # K is accumulated in bk-sized tiles vs the reference's single dot,
+    # so f32 picks up summation-order noise past 2e-5
+    t = dict(atol=1e-3, rtol=1e-3) if dtype == jnp.float32 else tol(dtype)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32), **t)
+
+
+def test_quant_matmul_dispatch_leading_dims():
+    """ops.quant_matmul collapses leading activation dims (the model
+    einsums feed (B, S, K)) and restores them on the output."""
+    B, S, K, N = 2, 6, 32, 24
+    x = arr(B, S, K)
+    w = jnp.asarray(R.integers(-127, 128, (K, N)), jnp.int8)
+    sc = jnp.abs(arr(N)) * 0.02 + 1e-4
+    o = ops.quant_matmul(x, w, sc)
+    assert o.shape == (B, S, N)
+    o_ref = ref.quant_matmul(x.reshape(B * S, K), w, sc).reshape(B, S, N)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("eq,wshape,n_contract", [
+    ("bsd,dw->bsw", (32, 48), 1),          # dense / griffin projection
+    ("bshk,hkd->bsd", (4, 8, 32), 2),      # attn output fold
+    ("bsd,dhk->bshk", (32, 4, 8), 1),      # qkv projection
+])
+def test_quant_einsum_matches_dequant_einsum(eq, wshape, n_contract):
+    """quant.einsum == einsum against the dequantized weight, for every
+    weight layout the model layers dispatch (scale tiles across middle
+    output axes; multi-axis contractions collapse row-major)."""
+    from repro import quant
+
+    wq = jnp.asarray(R.integers(-127, 128, wshape), jnp.int8)
+    sc = jnp.abs(arr(wshape[-1])) * 0.02 + 1e-4
+    leaf = quant.QuantLeaf(wq, sc)
+    if n_contract == 1:
+        x = arr(2, 5, wshape[0])
+    else:
+        x = arr(2, 5, *wshape[:n_contract])
+    got = quant.einsum(eq, x, leaf, jnp.float32, n_contract=n_contract)
+    want = jnp.einsum(eq, x, leaf.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_quant_expert_einsum_matches_dequant():
+    """MoE expert dispatch: every expert's slab shares the per-column
+    scale; both the routed (per-expert x) and dense-oracle (shared x)
+    forms must match the dequantized einsum."""
+    from repro import quant
+
+    E, d, f = 4, 16, 24
+    wq = jnp.asarray(R.integers(-127, 128, (E, d, f)), jnp.int8)
+    sc = jnp.abs(arr(f)) * 0.02 + 1e-4
+    leaf = quant.QuantLeaf(wq, sc)
+    x_routed = arr(2, E, 3, d)                 # (B, E, C, d)
+    got = quant.expert_einsum("becd,edf->becf", x_routed, leaf,
+                              jnp.float32)
+    want = jnp.einsum("becd,edf->becf", x_routed,
+                      leaf.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    x_shared = arr(2, 3, d)                    # (B, S, d), dense oracle
+    got = quant.expert_einsum("bsd,edf->besf", x_shared, leaf,
+                              jnp.float32, shared_x=True)
+    want = jnp.einsum("bsd,edf->besf", x_shared,
+                      leaf.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_quant_gather_rows_bit_identical():
+    """Gather-then-dequant == dequant-then-gather, bit for bit (the
+    embedding lookup never materializes the dequantized table)."""
+    from repro import quant
+
+    V, D = 64, 16
+    wq = jnp.asarray(R.integers(-127, 128, (V, D)), jnp.int8)
+    sc = jnp.abs(arr(D)) * 0.02 + 1e-4
+    leaf = quant.QuantLeaf(wq, sc)
+    idx = jnp.asarray(R.integers(0, V, (2, 7)), jnp.int32)
+    got = quant.gather_rows(leaf, idx, jnp.bfloat16)
+    want = leaf.astype(jnp.bfloat16)[idx]
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_quant_matmul_interpret_matches_ref_mode():
+    """The registry's interpret path (divisor tiles, no padding) agrees
+    with the ref fallback through the same dispatcher."""
+    import os
+
+    x = arr(12, 80)
+    w = jnp.asarray(R.integers(-127, 128, (80, 40)), jnp.int8)
+    sc = jnp.abs(arr(40)) * 0.02 + 1e-4
+    os.environ["REPRO_PALLAS"] = "ref"
+    try:
+        o_ref = ops.quant_matmul(x, w, sc)
+    finally:
+        os.environ.pop("REPRO_PALLAS")
+    os.environ["REPRO_PALLAS"] = "interpret"
+    try:
+        o_int = ops.quant_matmul(x, w, sc)
+    finally:
+        os.environ.pop("REPRO_PALLAS")
+    np.testing.assert_allclose(np.asarray(o_int), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_autotuned_blocks_overlay():
+    """set/load_autotuned overlay kernel_blocks() per profile; backend
+    mismatches are skipped; clear restores the static profile."""
+    from repro.configs import shapes
+
+    base = shapes.kernel_blocks("tpu")
+    art = {"autotune": {
+        "quant_matmul": {"backend": "cpu",
+                         "winner": {"qm_bm": 128, "qm_bk": 256,
+                                    "qm_bn": 128}},
+        "weight_transform": {"backend": "other",
+                             "winner": {"wt_bn": 64}}}}
+    try:
+        applied = shapes.load_autotuned(art, backend="cpu", profile="tpu")
+        assert applied == {"qm_bm": 128, "qm_bk": 256, "qm_bn": 128}
+        kb = shapes.kernel_blocks("tpu")
+        assert (kb.qm_bm, kb.qm_bk, kb.qm_bn) == (128, 256, 128)
+        assert kb.wt_bn == base.wt_bn          # backend mismatch skipped
+        assert kb.flash_bq == base.flash_bq    # untouned fields intact
+    finally:
+        shapes.clear_autotuned()
+    kb = shapes.kernel_blocks("tpu")
+    assert (kb.qm_bm, kb.qm_bk, kb.qm_bn) == \
+        (base.qm_bm, base.qm_bk, base.qm_bn)
