@@ -9,6 +9,18 @@ each K/V block is read exactly once (GQA-aware).
 Ring-buffer sliding-window caches are supported: slot ``j`` of a cache
 with ``S_max == window`` holds absolute position ``p`` where
 ``p ≡ j (mod window)``; validity is derived in-kernel from ``pos``.
+
+:func:`decode_attention_paged` is the block-paged variant: K/V live in
+a shared physical pool of fixed-size pages (``(n_pages, K, pt, dh)``)
+and each batch row owns a *page table* mapping logical page j to a
+physical page id.  The split-K grid already tiles the cache sequence,
+so paging is purely an index-map change — the table rides the scalar
+prefetch channel (``num_scalar_prefetch=2``) and logical cache block
+``s`` is fetched from physical block ``(table[b, s // r], s % r)``
+where ``r = pt // bs``.  The kernel body (online softmax, GQA packing,
+ring-window validity over *logical* positions) is shared verbatim with
+the slotted kernel; unallocated table entries may point anywhere —
+their positions are beyond ``pos``, so masking zeroes them exactly.
 """
 from __future__ import annotations
 
@@ -128,4 +140,71 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos.astype(jnp.int32), qr, kc, vc)
+    return out.reshape(B, H, dh)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "bs", "interpret"))
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, tables: jax.Array,
+                           pos: jax.Array, *, window: int = 0,
+                           bs: int = 128, interpret: bool = False
+                           ) -> jax.Array:
+    """q: (B, H, dh); page pools: (P, K, pt, dh) kv-head-major, shared
+    across the batch; tables: (B, NP) int32 physical page ids (logical
+    sequence extent NP * pt per row); pos: (B,).  Returns (B, H, dh).
+
+    ``bs`` must divide ``pt`` so every grid block lives inside one
+    page.  Ring-window semantics are identical to the slotted kernel
+    over the logical extent.
+    """
+    B, H, dh = q.shape
+    K, pt = k_pages.shape[1], k_pages.shape[2]
+    NP = tables.shape[1]
+    rep = H // K
+    bs = min(bs, pt)
+    assert pt % bs == 0, (pt, bs)
+    r = pt // bs                     # cache blocks per page
+    ns = NP * r
+
+    qr = q.reshape(B, K, rep, dh)
+    grid = (B, K, ns)
+    # the body is the slotted kernel's: s_lo = si * bs is the *logical*
+    # offset of block si, which the shared masking math consumes; only
+    # the fetch location below goes through the page table
+    kern = functools.partial(_kernel, window=window, bs=bs, ns=ns, rep=rep,
+                             scale=1.0 / math.sqrt(dh))
+
+    def paged_kern(pos_ref, tbl_ref, *rest):
+        del tbl_ref                  # consumed by the index maps only
+        kern(pos_ref, *rest)
+
+    def kv_map(b, h, s, pos_ref, tbl_ref):
+        del pos_ref
+        return (tbl_ref[b, s // r], h, s % r, 0)
+
+    out = pl.pallas_call(
+        paged_kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, dh),
+                             lambda b, h, s, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, dh), kv_map),
+                pl.BlockSpec((1, 1, bs, dh), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, dh),
+                                   lambda b, h, s, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, LANES), jnp.float32),
+                pltpu.VMEM((rep, LANES), jnp.float32),
+                pltpu.VMEM((rep, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, K, rep, dh), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), tables.astype(jnp.int32), qr, k_pages, v_pages)
     return out.reshape(B, H, dh)

@@ -49,6 +49,8 @@ from repro.configs.shapes import kernel_blocks, wt_shard_tiles
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.decode_attention import (
+    decode_attention_paged as _decode_paged_pallas)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
 from repro.kernels.weight_transform import weight_transform as _wt_pallas
@@ -360,6 +362,46 @@ def _probe_decode():
 
 
 _register("decode_attention", _decode_pallas, _probe_decode)
+
+
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, tables: jax.Array,
+                           pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """Block-paged decode attention: q (B, H, dh); page pools
+    (P, K, pt, dh) shared across the batch; tables (B, NP) int32 page
+    ids per row; pos (B,). -> (B, H, dh).
+
+    The kernel tile must divide the page size (every cache block lives
+    inside one physical page), so both pallas and interpret modes take
+    the divisor tile of the profile's ``decode_bs``.
+    """
+    mode = registry.dispatch("decode_attention_paged")
+    kb = _blocks()
+    pt = k_pages.shape[2]
+    if mode == "pallas":
+        return _decode_paged_pallas(q, k_pages, v_pages, tables, pos,
+                                    window=window,
+                                    bs=_divisor_tile(kb.decode_bs, pt))
+    if mode == "interpret":
+        return _decode_paged_pallas(q, k_pages, v_pages, tables, pos,
+                                    window=window,
+                                    bs=_divisor_tile(kb.decode_bs, pt),
+                                    interpret=True)
+    return ref.decode_attention_paged(q, k_pages, v_pages, tables, pos,
+                                      window=window)
+
+
+def _probe_decode_paged():
+    _decode_paged_pallas.lower(
+        jnp.zeros((1, 2, 128), jnp.float32),
+        jnp.zeros((2, 1, 128, 128), jnp.float32),
+        jnp.zeros((2, 1, 128, 128), jnp.float32),
+        jnp.zeros((1, 2), jnp.int32),
+        jnp.zeros((1,), jnp.int32), window=0, bs=128)
+
+
+_register("decode_attention_paged", _decode_paged_pallas,
+          _probe_decode_paged)
 
 
 # ---------------------------------------------------------------------------

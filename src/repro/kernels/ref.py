@@ -95,6 +95,28 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, H, dh).astype(q.dtype)
 
 
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, tables: jax.Array,
+                           pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """Block-paged decode attention: gather-then-attend oracle.
+
+    q: (B, H, dh); k_pages/v_pages: (P, K, pt, dh) — physical page pools
+    shared across the batch; tables: (B, NP) int32 page ids per row
+    (logical extent NP * pt); pos: (B,).
+
+    The definition: per batch row, gather its NP pages into the
+    contiguous logical cache and run :func:`decode_attention` — so the
+    math (masking of garbage rows beyond ``pos``, ring-window validity
+    over logical positions, GQA) is *identical* to the slotted oracle.
+    """
+    B = q.shape[0]
+    K, pt, dh = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    NP = tables.shape[1]
+    kc = jnp.swapaxes(k_pages[tables], 1, 2).reshape(B, K, NP * pt, dh)
+    vc = jnp.swapaxes(v_pages[tables], 1, 2).reshape(B, K, NP * pt, dh)
+    return decode_attention(q, kc, vc, pos, window=window)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD (state-space duality)
 # ---------------------------------------------------------------------------

@@ -146,6 +146,72 @@ def block_decode(cfg, kind: str, p: PyTree, x: jax.Array, pos: jax.Array,
     return x, cache
 
 
+def _kind_paged(cfg, kind: str) -> bool:
+    """True when this layer kind's KV can live in a shared page pool.
+
+    Only full-attention KV caches page: a sliding-window ring reuses
+    physical slots for rolling positions (page identity would change
+    under it), and SSM / RG-LRU states are O(1) per sequence — both
+    stay slot-resident alongside the paged layers.
+    """
+    return kind in ("attn", "local_attn", "moe") and _kind_window(cfg, kind) == 0
+
+
+def block_decode_paged(cfg, kind: str, p: PyTree, x: jax.Array,
+                       pos: jax.Array, cache: PyTree, pages: PyTree,
+                       tables: jax.Array):
+    """Single-token decode with full-attention KV served from a page pool.
+
+    ``pages`` is ``{"k", "v"}`` of ``(P, K, pt, dh)`` for paged kinds and
+    ``None`` for kinds whose state stays slot-resident (then ``cache``
+    is the real per-slot state and this defers to :func:`block_decode`).
+    Returns (x, cache, pages).
+    """
+    if pages is None:
+        x, cache = block_decode(cfg, kind, p, x, pos, cache)
+        return x, cache, None
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    y, kp, vp = layers.attention_decode_paged(cfg, p["attn"], h, pos,
+                                              pages["k"], pages["v"], tables)
+    x = x + y
+    h = layers.apply_norm(cfg, p["norm2"], x)
+    if kind == "moe":
+        y, _ = moe.moe_block(cfg, p["moe"], h)
+        x = x + y
+    else:
+        x = x + layers.mlp_block(cfg, p["mlp"], h)
+    return x, cache, {"k": kp, "v": vp}
+
+
+def block_chunk(cfg, kind: str, p: PyTree, x: jax.Array, cache_l: PyTree,
+                off: int, cs: int) -> Tuple[jax.Array, PyTree]:
+    """One full-attention block over a ``cs``-token segment starting at
+    absolute position ``off``, attending to the cache prefix + itself.
+    Shared by :meth:`LM.prefill_chunked` (static chunk sweep) and
+    :meth:`LM.prefill_continue` (prefix-cache resume)."""
+    positions = (off + jnp.arange(cs))[None, :]
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    q, k, v = layers.qkv_project(cfg, p["attn"], h, positions)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["k"], jnp.swapaxes(k, 1, 2).astype(
+            cache_l["k"].dtype), off, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["v"], jnp.swapaxes(v, 1, 2).astype(
+            cache_l["v"].dtype), off, axis=2)
+    k_ctx = jax.lax.slice_in_dim(kc, 0, off + cs, axis=2)
+    v_ctx = jax.lax.slice_in_dim(vc, 0, off + cs, axis=2)
+    from repro.kernels import ops
+    o = ops.flash_attention_kvmajor(q, k_ctx, v_ctx, causal=True)
+    x = x + layers.attn_out(cfg, p["attn"], o)
+    h = layers.apply_norm(cfg, p["norm2"], x)
+    if kind == "moe":
+        y, _ = moe.moe_block(cfg, p["moe"], h)
+        x = x + y
+    else:
+        x = x + layers.mlp_block(cfg, p["mlp"], h)
+    return x, {"k": kc, "v": vc}
+
+
 def block_prefill(cfg, kind: str, p: PyTree, x: jax.Array,
                   positions: jax.Array, cache: PyTree
                   ) -> Tuple[jax.Array, PyTree]:
@@ -437,7 +503,6 @@ class LM:
         assert cfg.sliding_window == 0 and not cfg.is_encoder and \
             cfg.family not in (Family.SSM, Family.HYBRID), \
             "chunked prefill: full-attention decoder LMs only"
-        from repro.kernels import ops
         tokens = batch["tokens"]
         if cfg.family == Family.VLM:
             x_all = self.embed(params, batch)
@@ -447,28 +512,6 @@ class LM:
         chunk = min(chunk, S)
         assert S % chunk == 0, (S, chunk)
         pat = self.pattern
-
-        def block_chunk(kind, p, x, cache_l, off, cs):
-            positions = (off + jnp.arange(cs))[None, :]
-            h = layers.apply_norm(cfg, p["norm1"], x)
-            q, k, v = layers.qkv_project(cfg, p["attn"], h, positions)
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache_l["k"], jnp.swapaxes(k, 1, 2).astype(
-                    cache_l["k"].dtype), off, axis=2)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache_l["v"], jnp.swapaxes(v, 1, 2).astype(
-                    cache_l["v"].dtype), off, axis=2)
-            k_ctx = jax.lax.slice_in_dim(kc, 0, off + cs, axis=2)
-            v_ctx = jax.lax.slice_in_dim(vc, 0, off + cs, axis=2)
-            o = ops.flash_attention_kvmajor(q, k_ctx, v_ctx, causal=True)
-            x = x + layers.attn_out(cfg, p["attn"], o)
-            h = layers.apply_norm(cfg, p["norm2"], x)
-            if kind == "moe":
-                y, _ = moe.moe_block(cfg, p["moe"], h)
-                x = x + y
-            else:
-                x = x + layers.mlp_block(cfg, p["mlp"], h)
-            return x, {"k": kc, "v": vc}
 
         xs = tuple(params["blocks"][f"s{i}"] for i in range(len(pat)))
         logits = None
@@ -480,8 +523,8 @@ class LM:
                 slices, csl = inp
                 new_c = []
                 for slot, kind in enumerate(pat):
-                    x, c2 = block_chunk(kind, slices[slot], x, csl[slot],
-                                        _off, chunk)
+                    x, c2 = block_chunk(cfg, kind, slices[slot], x,
+                                        csl[slot], _off, chunk)
                     new_c.append(c2)
                 return x, tuple(new_c)
 
@@ -491,12 +534,49 @@ class LM:
             for i in range(len(pat)):
                 cache[f"s{i}"] = new_caches[i]
             for t, kind in enumerate(self.tail_kinds):
-                x, c2 = block_chunk(kind, params["blocks"][f"t{t}"], x,
+                x, c2 = block_chunk(cfg, kind, params["blocks"][f"t{t}"], x,
                                     cache[f"t{t}"], off, chunk)
                 cache[f"t{t}"] = c2
             if ci == S // chunk - 1:
                 logits = self._head(params, x)
         return logits, cache
+
+    def prefill_continue(self, params: PyTree, batch: Dict[str, jax.Array],
+                         cache: PyTree, *, off: int, unroll: bool = False
+                         ) -> Tuple[jax.Array, PyTree]:
+        """Resume a full-attention prefill at absolute position ``off``:
+        cache rows ``[0, off)`` already hold valid K/V (gathered from
+        shared prefix pages) and ``batch["tokens"]`` is the *suffix*.
+        Returns (logits for the suffix, cache filled through
+        ``off + suffix_len``).  This is the prefix-cache fast path —
+        TTFT work is proportional to the unshared suffix only.
+        """
+        cfg = self.cfg
+        assert cfg.sliding_window == 0 and not cfg.is_encoder and \
+            cfg.family not in (Family.SSM, Family.HYBRID), \
+            "prefill_continue: full-attention decoder LMs only"
+        x = self.embed(params, batch)
+        cs = x.shape[1]
+        pat = self.pattern
+
+        def body(x, inp):
+            slices, csl = inp
+            new_c = []
+            for slot, kind in enumerate(pat):
+                x, c2 = block_chunk(cfg, kind, slices[slot], x, csl[slot],
+                                    off, cs)
+                new_c.append(c2)
+            return x, tuple(new_c)
+
+        xs = tuple(params["blocks"][f"s{i}"] for i in range(len(pat)))
+        cs_in = tuple(cache[f"s{i}"] for i in range(len(pat)))
+        x, new_caches = self._scan_units(body, x, (xs, cs_in), unroll)
+        out_cache = {f"s{i}": new_caches[i] for i in range(len(pat))}
+        for t, kind in enumerate(self.tail_kinds):
+            x, c2 = block_chunk(cfg, kind, params["blocks"][f"t{t}"], x,
+                                cache[f"t{t}"], off, cs)
+            out_cache[f"t{t}"] = c2
+        return self._head(params, x), out_cache
 
     def decode_step(self, params: PyTree, cache: PyTree, tokens: jax.Array,
                     pos: jax.Array, *, unroll: bool = False
@@ -530,6 +610,223 @@ class LM:
                                  pos, cache[f"t{t}"])
             out_cache[f"t{t}"] = c2
         return self._head(params, x), out_cache
+
+    # ----------------------------------------------------- paged KV decode
+    def _cache_groups(self) -> List[Tuple[str, str, bool]]:
+        """(key, kind, stacked) for every block cache group."""
+        out = [(f"s{i}", k, True) for i, k in enumerate(self.pattern)]
+        out += [(f"t{t}", k, False) for t, k in enumerate(self.tail_kinds)]
+        return out
+
+    def paged_kinds(self) -> List[str]:
+        return [k for k in set(self.pattern) | set(self.tail_kinds)
+                if _kind_paged(self.cfg, k)]
+
+    @property
+    def supports_prefix_cache(self) -> bool:
+        """Prefix reuse needs every layer's sequence state to live in
+        pages (an unshared SSM/ring state would silently diverge) and a
+        token-only prompt identity (no image/audio side inputs)."""
+        cfg = self.cfg
+        return (not cfg.is_encoder
+                and cfg.family not in (Family.AUDIO, Family.VLM, Family.VISION)
+                and all(_kind_paged(cfg, k)
+                        for k in set(self.pattern) | set(self.tail_kinds)))
+
+    def kv_page_bytes(self, page_tokens: int) -> int:
+        """Device bytes one page id costs across *all* paged layers
+        (K and V).  0 when no layer pages (pure-SSM / ring models)."""
+        cfg = self.cfg
+        per = (2 * cfg.n_kv_heads * page_tokens * cfg.dh
+               * jnp.dtype(cfg.compute_dtype).itemsize)
+        n = sum(self.n_units if stacked else 1
+                for _, kind, stacked in self._cache_groups()
+                if _kind_paged(cfg, kind))
+        return n * per
+
+    def init_kv_pages(self, n_pages: int, page_tokens: int) -> PyTree:
+        """Physical page pools: per paged group, ``{"k","v"}`` arrays of
+        ``(n_units, n_pages, K, pt, dh)`` (stacked) / ``(n_pages, K, pt,
+        dh)`` (tail).  Non-paged groups map to ``None``.  The caller
+        sizes ``n_pages`` to budget + 1 (the trailing scratch page)."""
+        cfg = self.cfg
+        pools: Dict[str, PyTree] = {}
+        for key, kind, stacked in self._cache_groups():
+            if not _kind_paged(cfg, kind):
+                pools[key] = None
+                continue
+            shape = (n_pages, cfg.n_kv_heads, page_tokens, cfg.dh)
+            if stacked:
+                shape = (self.n_units,) + shape
+            pools[key] = {"k": jnp.zeros(shape, cfg.compute_dtype),
+                          "v": jnp.zeros(shape, cfg.compute_dtype)}
+        return pools
+
+    def init_cache_paged(self, batch: int, cache_len: int) -> PyTree:
+        """Slot-resident decode state with paged kinds' K/V leaves left
+        as ``None`` (they live in the page pool): same tree structure as
+        :meth:`init_cache`, so the per-slot join machinery applies."""
+        cfg = self.cfg
+        caches: Dict[str, PyTree] = {}
+        for key, kind, stacked in self._cache_groups():
+            if _kind_paged(cfg, kind):
+                one: PyTree = {"k": None, "v": None}
+            else:
+                one = kind_cache(cfg, kind, batch, cache_len)
+            if stacked:
+                per = [one if _kind_paged(cfg, kind) else
+                       kind_cache(cfg, kind, batch, cache_len)
+                       for _ in range(self.n_units)]
+                caches[key] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+            else:
+                caches[key] = one
+        return caches
+
+    def init_request_cache(self, paged_len: int, state_len: int) -> PyTree:
+        """B=1 prefill cache for paged admission: paged kinds sized to
+        the request's page span (``paged_len`` rows feed
+        :meth:`pack_pages`), slot-resident kinds sized to the
+        scheduler's state length so the slot-join shapes match."""
+        cfg = self.cfg
+        caches: Dict[str, PyTree] = {}
+        for key, kind, stacked in self._cache_groups():
+            n = paged_len if _kind_paged(cfg, kind) else state_len
+            if stacked:
+                per = [kind_cache(cfg, kind, 1, n)
+                       for _ in range(self.n_units)]
+                caches[key] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+            else:
+                caches[key] = kind_cache(cfg, kind, 1, n)
+        return caches
+
+    def strip_paged(self, cache: PyTree) -> PyTree:
+        """Project a contiguous per-request cache onto the paged state
+        structure: paged kinds' K/V leaves become ``None`` (their
+        content transfers via :meth:`pack_pages` instead)."""
+        out = dict(cache)
+        for key, kind, _ in self._cache_groups():
+            if _kind_paged(self.cfg, kind):
+                out[key] = {"k": None, "v": None}
+        return out
+
+    def gather_pages(self, cache: PyTree, pools: PyTree,
+                     ids: jax.Array) -> PyTree:
+        """Copy physical pages ``ids`` (in logical order) into rows
+        ``[0, len(ids) * pt)`` of a contiguous single-request cache —
+        the device half of a prefix-cache hit."""
+        m = ids.shape[0]
+        out = dict(cache)
+        for key, kind, stacked in self._cache_groups():
+            if not _kind_paged(self.cfg, kind):
+                continue
+            dst = {}
+            for n in ("k", "v"):
+                pool, c = pools[key][n], cache[key][n]
+                pt = pool.shape[-2]
+                if stacked:
+                    seg = jnp.swapaxes(pool[:, ids], 1, 2)     # (u,K,m,pt,dh)
+                    seg = seg.reshape(pool.shape[0], 1, pool.shape[2],
+                                      m * pt, pool.shape[4])
+                    dst[n] = jax.lax.dynamic_update_slice(
+                        c, seg.astype(c.dtype), (0, 0, 0, 0, 0))
+                else:
+                    seg = jnp.swapaxes(pool[ids], 0, 1)        # (K,m,pt,dh)
+                    seg = seg.reshape(1, pool.shape[1], m * pt, pool.shape[3])
+                    dst[n] = jax.lax.dynamic_update_slice(
+                        c, seg.astype(c.dtype), (0, 0, 0, 0))
+            out[key] = dst
+        return out
+
+    def pack_pages(self, pools: PyTree, cache: PyTree, ids: jax.Array,
+                   first_page: int) -> PyTree:
+        """Copy contiguous cache rows ``[first_page * pt, (first_page +
+        len(ids)) * pt)`` out into physical pages ``ids`` — the device
+        half of admission (prompt K/V moves from the per-request prefill
+        cache into the shared pool)."""
+        m = int(ids.shape[0])
+        out = dict(pools)
+        for key, kind, stacked in self._cache_groups():
+            if not _kind_paged(self.cfg, kind):
+                continue
+            dst = {}
+            for n in ("k", "v"):
+                pool, c = pools[key][n], cache[key][n]
+                pt = pool.shape[-2]
+                lo = first_page * pt
+                if stacked:
+                    seg = jax.lax.slice_in_dim(c[:, 0], lo, lo + m * pt,
+                                               axis=2)          # (u,K,m*pt,dh)
+                    seg = seg.reshape(c.shape[0], c.shape[2], m, pt,
+                                      c.shape[4])
+                    seg = jnp.swapaxes(seg, 1, 2)               # (u,m,K,pt,dh)
+                    dst[n] = pool.at[:, ids].set(seg.astype(pool.dtype))
+                else:
+                    seg = jax.lax.slice_in_dim(c[0], lo, lo + m * pt, axis=1)
+                    seg = seg.reshape(c.shape[1], m, pt, c.shape[3])
+                    seg = jnp.swapaxes(seg, 0, 1)               # (m,K,pt,dh)
+                    dst[n] = pool.at[ids].set(seg.astype(pool.dtype))
+            out[key] = dst
+        return out
+
+    def copy_page(self, pools: PyTree, src: int, dst: int) -> PyTree:
+        """Device half of a copy-on-write fork: duplicate physical page
+        ``src`` into ``dst`` across every paged layer."""
+        out = dict(pools)
+        for key, kind, stacked in self._cache_groups():
+            if not _kind_paged(self.cfg, kind):
+                continue
+            if stacked:
+                out[key] = {n: pools[key][n].at[:, dst].set(
+                    pools[key][n][:, src]) for n in ("k", "v")}
+            else:
+                out[key] = {n: pools[key][n].at[dst].set(
+                    pools[key][n][src]) for n in ("k", "v")}
+        return out
+
+    def decode_step_paged(self, params: PyTree, cache: PyTree,
+                          pools: PyTree, tables: jax.Array,
+                          tokens: jax.Array, pos: jax.Array,
+                          *, unroll: bool = False):
+        """Batched single-token decode over the shared page pool.
+
+        cache: :meth:`init_cache_paged` state (non-paged layers only);
+        pools: :meth:`init_kv_pages` arrays; tables: (B, NP) int32 page
+        ids per batch row.  Returns (logits, cache, pools).
+        """
+        cfg = self.cfg
+        if cfg.family == Family.VLM:
+            batch = {"tokens": tokens,
+                     "img": jnp.zeros((tokens.shape[0], 0, cfg.frontend_dim),
+                                      cfg.compute_dtype)}
+        else:
+            batch = {"tokens": tokens}
+        x = self.embed(params, batch)
+        pat = self.pattern
+
+        def body(x, inp):
+            slices, csl, psl = inp
+            new_c, new_p = [], []
+            for slot, kind in enumerate(pat):
+                x, c2, p2 = block_decode_paged(cfg, kind, slices[slot], x,
+                                               pos, csl[slot], psl[slot],
+                                               tables)
+                new_c.append(c2)
+                new_p.append(p2)
+            return x, (tuple(new_c), tuple(new_p))
+
+        xs = tuple(params["blocks"][f"s{i}"] for i in range(len(pat)))
+        cs = tuple(cache[f"s{i}"] for i in range(len(pat)))
+        ps = tuple(pools[f"s{i}"] for i in range(len(pat)))
+        x, (new_c, new_p) = self._scan_units(body, x, (xs, cs, ps), unroll)
+        out_cache = {f"s{i}": new_c[i] for i in range(len(pat))}
+        out_pools = {f"s{i}": new_p[i] for i in range(len(pat))}
+        for t, kind in enumerate(self.tail_kinds):
+            x, c2, p2 = block_decode_paged(
+                cfg, kind, params["blocks"][f"t{t}"], x, pos,
+                cache[f"t{t}"], pools[f"t{t}"], tables)
+            out_cache[f"t{t}"] = c2
+            out_pools[f"t{t}"] = p2
+        return self._head(params, x), out_cache, out_pools
 
     # ------------------------------------------------------- streaming view
     def unit_names(self) -> List[str]:

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro import analysis, metrics as metrics_mod
 from repro.kernels import ops
+from repro.serving import kvpages
 from repro.serving.api import CacheOverflowError, GenerateSpec
 
 PyTree = Any
@@ -101,6 +102,57 @@ def validate_spec(spec: GenerateSpec, n_prompt: int, cache_len: int) -> int:
     return n_new
 
 
+def validate_spec_paged(spec: GenerateSpec, n_prompt: int, *,
+                        page_tokens: int, n_pages: int,
+                        stats: Optional["kvpages.KVPageStats"] = None) -> int:
+    """Paged-mode admission check: the only *error* is a request that
+    could never fit the page budget (everything smaller is blocking
+    backpressure in the pool, not an exception).  Returns the effective
+    n_new.  ``n_pages`` is the per-request page ceiling — min(pool
+    budget, page-table width)."""
+    n_new = int(spec.n_new)
+    if n_new < 1:
+        raise ValueError(f"n_new must be >= 1, got {spec.n_new}")
+    if spec.max_len is not None:
+        n_new = min(n_new, int(spec.max_len) - n_prompt)
+        if n_new < 1:
+            raise CacheOverflowError(
+                f"max_len={spec.max_len} leaves no room to generate "
+                f"after a {n_prompt}-token prompt")
+    need = -(-(n_prompt + n_new) // page_tokens)
+    if need > n_pages:
+        occ = ""
+        if stats is not None:
+            occ = (f"; live occupancy {stats.used}/{stats.total} pages "
+                   f"({stats.pinned} pinned, {stats.cached} cached)")
+        raise CacheOverflowError(
+            f"prompt ({n_prompt}) + n_new ({n_new}) needs {need} KV pages "
+            f"but the per-request budget is {n_pages} pages x "
+            f"{page_tokens} tokens = {n_pages * page_tokens} tokens{occ}; "
+            f"lower n_new / set max_len or raise the page budget "
+            f"(--kv-budget-mb)")
+    return n_new
+
+
+def paged_page_count(model, *, page_tokens: int,
+                     budget_bytes: Optional[int] = None,
+                     n_slots: int = 8, cache_len: int = 256) -> int:
+    """Page budget for a scheduler: ``budget_bytes`` divided by the
+    per-page device footprint across all paged layers, else (no byte
+    budget, or a model with no paged layers — pure-SSM/ring states cost
+    no page bytes) the slotted arena's worth of pages, so paged mode
+    never regresses capacity by default."""
+    per_page = model.kv_page_bytes(page_tokens)
+    if budget_bytes and per_page > 0:
+        n = int(budget_bytes) // per_page
+        if n < 1:
+            raise ValueError(
+                f"kv budget {budget_bytes} B below one page "
+                f"({per_page} B across paged layers)")
+        return n
+    return n_slots * (-(-cache_len // page_tokens))
+
+
 def _as_prompt(prompt) -> jax.Array:
     arr = jnp.asarray(prompt, jnp.int32)
     if arr.ndim == 1:
@@ -145,6 +197,12 @@ class _Active:
         self.remaining = n_new - 1
         self.done = False
         self.error: Optional[BaseException] = None
+        # paged mode only: reserved physical pages (prefix hits first),
+        # how many of them were prefix hits, and the prompt's running
+        # page hashes (for publishing after the pack)
+        self.page_ids: List[int] = []
+        self.n_hit = 0
+        self.hashes: List[str] = []
 
     @property
     def next_pos(self) -> int:
@@ -202,6 +260,41 @@ def _join_fn(model, fingerprint):
     return jax.jit(join)
 
 
+# paged-mode twins of the factories above — same caching and fresh-closure
+# rationale (never jit a bound method: R5)
+
+@functools.lru_cache(maxsize=16)
+def _paged_step_fn(model, fingerprint):
+    def step(params, cache, pools, tables, tok, pos, seed, temp):
+        logits, cache, pools = model.decode_step_paged(
+            params, cache, pools, tables, tok, pos)
+        nxt = sample_tokens(logits[:, -1, :], seed, pos + 1, temp)
+        return nxt[:, None], cache, pools
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=16)
+def _prefill_cont_fn(model, fingerprint):
+    return jax.jit(
+        lambda params, batch, cache, off:
+        model.prefill_continue(params, batch, cache, off=off),
+        static_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=16)
+def _gather_fn(model, fingerprint):
+    return jax.jit(
+        lambda cache, pools, ids: model.gather_pages(cache, pools, ids))
+
+
+@functools.lru_cache(maxsize=16)
+def _pack_fn(model, fingerprint):
+    return jax.jit(
+        lambda pools, cache, ids, first:
+        model.pack_pages(pools, cache, ids, first),
+        static_argnums=(3,))
+
+
 class DecodeScheduler:
     """Continuous-batching decode over one slotted KV cache.
 
@@ -222,6 +315,9 @@ class DecodeScheduler:
 
     def __init__(self, model, params: PyTree, *, n_slots: int = 8,
                  cache_len: int = 256,
+                 kv_page_tokens: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None,
+                 kv_max_seq: Optional[int] = None,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
@@ -231,7 +327,51 @@ class DecodeScheduler:
         self.params = params
         self.n_slots = int(n_slots)
         self.cache_len = int(cache_len)
-        self._cache = model.init_cache(self.n_slots, self.cache_len)  # guarded-by: _cv
+        # paged mode: full-attention KV lives in a shared page pool
+        # (kvpages.KVPagePool bookkeeping + init_kv_pages device arrays)
+        # instead of per-slot arena rows; admission is page-budgeted
+        self.paged = kv_page_tokens is not None
+        m = metrics_mod.resolve(metrics)
+        if self.paged:
+            pt = int(kv_page_tokens)
+            if pt < 1:
+                raise ValueError(
+                    f"kv_page_tokens must be >= 1, got {kv_page_tokens}")
+            self.page_tokens = pt
+            self.n_pages = paged_page_count(
+                model, page_tokens=pt, budget_bytes=kv_budget_bytes,
+                n_slots=self.n_slots, cache_len=self.cache_len)
+            # page-table width == per-request page ceiling; it bounds
+            # the logical attention extent NP*pt — and with it
+            # fallback-mode gather traffic — so it defaults to the
+            # slotted cache_len rather than the whole pool.  Pass
+            # kv_max_seq > cache_len to let one request stretch across
+            # more of the page budget than a slotted arena row held.
+            self.np_max = max(1, min(
+                self.n_pages,
+                -(-int(kv_max_seq if kv_max_seq is not None
+                       else self.cache_len) // pt)))
+            self.kvpool = kvpages.KVPagePool(
+                n_pages=self.n_pages, page_tokens=pt,
+                page_bytes=model.kv_page_bytes(pt),
+                model_key=model.cfg.name, metrics=m)
+            # device pools carry one trailing scratch page that inactive
+            # batch rows write into
+            self._kvpages = model.init_kv_pages(                # guarded-by: _cv
+                self.n_pages + 1, pt)
+            self._cache = model.init_cache_paged(               # guarded-by: _cv
+                self.n_slots, self.cache_len)
+            self._tables = np.full((self.n_slots, self.np_max),  # guarded-by: _cv
+                                   self.kvpool.scratch_id, np.int32)
+            # prefix reuse needs every sequence state paged; a model with
+            # any slot-resident kind still pages admission accounting but
+            # keeps the slotted length ceiling (ring/SSM semantics)
+            self._prefix_ok = model.supports_prefix_cache
+            self._all_paged = bool(model.paged_kinds()) and all(
+                k in model.paged_kinds()
+                for k in set(model.pattern) | set(model.tail_kinds))
+        else:
+            self._cache = model.init_cache(self.n_slots, self.cache_len)  # guarded-by: _cv
         # host-side per-slot step inputs
         self._tok = np.zeros((self.n_slots, 1), np.int32)    # guarded-by: _cv
         self._pos = np.zeros((self.n_slots,), np.int32)      # guarded-by: _cv
@@ -252,11 +392,15 @@ class DecodeScheduler:
         self._prefill = _prefill_fn(model, self._fingerprint)
         self._step = _step_fn(model, self._fingerprint)
         self._join_cache = _join_fn(model, self._fingerprint)
+        if self.paged:
+            self._pstep = _paged_step_fn(model, self._fingerprint)
+            self._prefill_cont = _prefill_cont_fn(model, self._fingerprint)
+            self._gather = _gather_fn(model, self._fingerprint)
+            self._pack = _pack_fn(model, self._fingerprint)
         # counters
         self.steps = 0
         self.max_occupancy = 0
         self.joined = 0
-        m = metrics_mod.resolve(metrics)
         # shared across all schedulers of a platform: occupancy/steps
         # aggregate over instances (the decode capacity the node runs)
         self._m_steps = m.counter("decode/steps")
@@ -278,6 +422,9 @@ class DecodeScheduler:
         """
         prompt = _as_prompt(spec.prompt)
         n_prompt = int(prompt.shape[1])
+        if self.paged:
+            return self._generate_paged(spec, prompt, n_prompt,
+                                        first_token, t_first)
         n_new = validate_spec(spec, n_prompt, self.cache_len)
 
         cache1 = self.model.init_cache(1, self.cache_len)
@@ -302,6 +449,80 @@ class DecodeScheduler:
             raise req.error
         return GenResult(req.tokens, req.times, n_prompt)
 
+    def _generate_paged(self, spec: GenerateSpec, prompt, n_prompt: int,
+                        first_token, t_first) -> GenResult:
+        """Paged admission: reserve whole pages (prefix hits first, the
+        rest all-or-nothing from the pool — blocking backpressure, never
+        a per-slot length ceiling), prefill only the unshared suffix,
+        then join the batch like any slotted request."""
+        pt = self.page_tokens
+        n_new = validate_spec_paged(spec, n_prompt, page_tokens=pt,
+                                    n_pages=self.np_max,
+                                    stats=self.kvpool.stats())
+        if not self._all_paged:
+            # some sequence state is still slot-resident (ring / SSM):
+            # its capacity ceiling applies unchanged
+            n_new = validate_spec(spec, n_prompt, self.cache_len)
+        need = -(-(n_prompt + n_new) // pt)
+        hit: List[int] = []
+        if self._prefix_ok:
+            hashes = kvpages.page_hashes(self.kvpool.model_key,
+                                         np.asarray(prompt)[0], pt)
+            # a hit must leave a non-empty prefill suffix (the request's
+            # own logits come from its last prompt token)
+            hashes_full = hashes
+            hashes = hashes[:min(len(hashes), (n_prompt - 1) // pt)]
+            hit = self.kvpool.match_prefix(hashes)
+        else:
+            hashes_full = []
+        try:
+            new = self.kvpool.alloc(need - len(hit), timeout=120.0)
+        except TimeoutError:
+            # our own prefix pins may be what is starving the pool: drop
+            # them and queue for the whole span like a cold request
+            self.kvpool.release(hit)
+            hit = []
+            new = self.kvpool.alloc(need)
+        page_ids = list(hit) + list(new)
+        n_hit = len(hit)
+        try:
+            cache1 = self.model.init_request_cache(need * pt, self.cache_len)
+            off = n_hit * pt
+            if off:
+                with self._cv:
+                    pools = self._kvpages   # hit pages are pinned ⇒ immutable
+                cache1 = self._gather(
+                    cache1, pools, jnp.asarray(np.asarray(hit, np.int32)))
+                logits, cache1 = self._prefill_cont(
+                    self.params, {"tokens": prompt[:, off:]}, cache1, off)
+            else:
+                logits, cache1 = self._prefill(self.params,
+                                               {"tokens": prompt}, cache1)
+            if first_token is None:
+                jax.block_until_ready(logits)
+                first_token = sample_first(logits, spec, n_prompt)
+                t_first = time.monotonic()
+            req = _Active(spec, cache1, int(first_token), float(t_first),
+                          n_prompt, n_new)
+            req.page_ids = page_ids
+            req.n_hit = n_hit
+            req.hashes = hashes_full
+        except BaseException:
+            self.kvpool.release(page_ids)
+            raise
+        if req.remaining == 0 or (spec.eos_id is not None
+                                  and req.tokens[-1] == spec.eos_id):
+            self.kvpool.release(page_ids)
+            return GenResult(req.tokens, req.times, n_prompt)
+
+        with self._cv:
+            self._pending.append(req)
+            self._cv.notify_all()
+        self._pump(req)
+        if req.error is not None:
+            raise req.error
+        return GenResult(req.tokens, req.times, n_prompt)
+
     @property
     def kernel_modes(self) -> Dict[str, str]:
         """Resolved kernel-registry dispatch per op as of this
@@ -314,10 +535,18 @@ class DecodeScheduler:
 
     def stats(self) -> Dict[str, int]:
         with self._cv:
-            return {"steps": self.steps, "joined": self.joined,
-                    "max_occupancy": self.max_occupancy,
-                    "active": len(self._slots) + len(self._pending),
-                    "n_slots": self.n_slots}
+            out = {"steps": self.steps, "joined": self.joined,
+                   "max_occupancy": self.max_occupancy,
+                   "active": len(self._slots) + len(self._pending),
+                   "n_slots": self.n_slots}
+        if self.paged:
+            ps = self.kvpool.stats()
+            out.update(kv_page_tokens=self.page_tokens,
+                       kv_pages_total=ps.total, kv_pages_used=ps.used,
+                       kv_pages_pinned=ps.pinned,
+                       kv_prefix_hits=ps.prefix_hits,
+                       kv_prefix_misses=ps.prefix_misses)
+        return out
 
     def reset_peaks(self):
         """Re-arm the max_occupancy watermark at the current occupancy
@@ -334,8 +563,11 @@ class DecodeScheduler:
             req = self._pending.popleft()
             slot = min(self._free)
             self._free.remove(slot)
-            self._cache = self._join_cache(self._cache, req.cache1,
-                                           jnp.int32(slot))
+            if self.paged:
+                self._join_paged_locked(req, slot)
+            else:
+                self._cache = self._join_cache(self._cache, req.cache1,
+                                               jnp.int32(slot))
             req.cache1 = None
             self._slots[slot] = req
             self._tok[slot, 0] = req.tokens[-1]
@@ -347,12 +579,54 @@ class DecodeScheduler:
             self._m_joined.inc()
             self._m_occ.set(len(self._slots))
 
+    def _join_paged_locked(self, req: _Active, slot: int):
+        """Paged half of admission (caller holds the lock): merge the
+        slot-resident state, move new prompt pages from the request's
+        contiguous prefill cache into the pool, publish their hashes for
+        prefix reuse, and point the slot's page-table row at them."""
+        self._cache = self._join_cache(
+            self._cache, self.model.strip_paged(req.cache1), jnp.int32(slot))
+        n_pp = -(-req.n_prompt // self.page_tokens)   # pages holding prompt
+        ids = req.page_ids
+        # copy-on-write guard on the pack targets — fresh allocations
+        # have refcount 1, so this only ever forks if a future caller
+        # grows sharing semantics; the invariant stays locally enforced
+        for j in range(req.n_hit, n_pp):
+            pid, copied = self.kvpool.ensure_writable(ids[j])
+            if copied:
+                self._kvpages = self.model.copy_page(self._kvpages,
+                                                     ids[j], pid)
+                ids[j] = pid
+        if n_pp > req.n_hit:
+            self._kvpages = self._pack(
+                self._kvpages, req.cache1,
+                jnp.asarray(np.asarray(ids[req.n_hit:n_pp], np.int32)),
+                req.n_hit)
+        # publish *full* prompt pages only (device content final now);
+        # partial trailing pages keep receiving decode writes
+        for j in range(req.n_hit, min(len(req.hashes), n_pp)):
+            self.kvpool.register(ids[j], req.hashes[j])
+        self._tables[slot, :] = self.kvpool.scratch_id
+        self._tables[slot, :len(ids)] = ids
+
+    def _leave_paged_locked(self, req: _Active, slot: int):
+        """Release a leaver's page references and park its table row on
+        the scratch page (caller holds the lock)."""
+        self._tables[slot, :] = self.kvpool.scratch_id
+        self.kvpool.release(req.page_ids)
+        req.page_ids = []
+
     def _fail_locked(self, e: BaseException):
         """Abort every resident request with ``e`` (caller holds the
         lock): a failed step/join leaves no thread parked forever."""
         self._stepping = False
         for req in list(self._slots.values()) + list(self._pending):
             req.error = e
+            if self.paged and req.page_ids:
+                self.kvpool.release(req.page_ids)
+                req.page_ids = []
+        if self.paged:
+            self._tables[:, :] = self.kvpool.scratch_id
         self._slots.clear()
         self._pending.clear()
         self._free = list(range(self.n_slots))
@@ -379,14 +653,21 @@ class DecodeScheduler:
                     pos = jnp.asarray(self._pos)
                     seed = jnp.asarray(self._seed)
                     temp = jnp.asarray(self._temp)
+                    if self.paged:
+                        pools = self._kvpages
+                        tables = jnp.asarray(self._tables)
                 except BaseException as e:
                     # anything failing while _stepping is set must fail
                     # ALL residents, or their threads wait forever
                     self._fail_locked(e)
                     raise
             try:
-                nxt, new_cache = self._step(params, cache, tok, pos,
-                                            seed, temp)
+                if self.paged:
+                    nxt, new_cache, new_pools = self._pstep(
+                        params, cache, pools, tables, tok, pos, seed, temp)
+                else:
+                    nxt, new_cache = self._step(params, cache, tok, pos,
+                                                seed, temp)
                 nxt_host = np.asarray(nxt)
             except BaseException as e:
                 with self._cv:
@@ -395,6 +676,8 @@ class DecodeScheduler:
             t_now = time.monotonic()
             with self._cv:
                 self._cache = new_cache
+                if self.paged:
+                    self._kvpages = new_pools
                 self.steps += 1
                 for slot in list(self._slots):
                     req = self._slots[slot]
@@ -410,6 +693,8 @@ class DecodeScheduler:
                         req.done = True
                         del self._slots[slot]
                         self._free.append(slot)
+                        if self.paged:
+                            self._leave_paged_locked(req, slot)
                 self._m_steps.inc()
                 self._m_occ.set(len(self._slots))
                 self._stepping = False

@@ -53,6 +53,8 @@ class ServerlessPlatform:
                  cache_budget_bytes: Optional[int] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
+                 kv_page_tokens: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None,
                  mesh_shape=None, rules=None, compute_quant: bool = False,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
                  autoscale: Optional[Dict[str, Any]] = None,
@@ -69,6 +71,15 @@ class ServerlessPlatform:
         gen_slots / gen_cache_len: per-instance continuous-batching
         capacity — up to gen_slots concurrent generation requests share
         one slotted KV cache of gen_cache_len positions per slot.
+
+        kv_page_tokens / kv_budget_bytes: block-paged decode KV — every
+        instance's scheduler serves full-attention KV from a shared
+        refcounted page pool (kv_page_tokens positions per page, pool
+        sized by kv_budget_bytes; None -> slotted-arena-equivalent page
+        count).  Mixed prompt lengths admit against the page budget
+        instead of a per-slot ceiling, and requests sharing a prompt
+        prefix pin the same physical pages (prefill skips the shared
+        span).  ``kv.*`` gauges/counters land in metrics_snapshot().
 
         mesh_shape / rules: shard-granular cold starts — every
         instance's pipeline streams weights onto a ``(data, model)``
@@ -119,6 +130,8 @@ class ServerlessPlatform:
                                cache=self.cache,
                                gen_slots=gen_slots,
                                gen_cache_len=gen_cache_len,
+                               kv_page_tokens=kv_page_tokens,
+                               kv_budget_bytes=kv_budget_bytes,
                                mesh_shape=mesh_shape, rules=rules,
                                compute_quant=compute_quant,
                                metrics=self.metrics,

@@ -41,7 +41,8 @@ from repro import analysis, metrics as metrics_mod
 from repro.core.coldstart import ColdStartEngine, LoadResult
 from repro.serving.api import GenerateSpec, PoolStats
 from repro.serving.decode import (DecodeScheduler, GenResult, sample_first,
-                                  validate_spec, _as_prompt)
+                                  paged_page_count, validate_spec,
+                                  validate_spec_paged, _as_prompt)
 from repro.serving.policy import EvictionPolicy, NeverEvict
 from repro.store.cache import WeightCache
 from repro.store.store import WeightStore
@@ -61,6 +62,8 @@ class FunctionInstance:
                  example_batch: Optional[Dict[str, jax.Array]] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
+                 kv_page_tokens: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None,
                  mesh_shape=None, rules=None, compute_quant: bool = False,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
                  source=None):
@@ -101,6 +104,10 @@ class FunctionInstance:
         self.last_load: Optional[LoadResult] = None
         self.gen_slots = int(gen_slots)
         self.gen_cache_len = int(gen_cache_len)
+        # kv_page_tokens != None switches the scheduler to block-paged
+        # KV (kv_budget_bytes caps the pool; None -> slotted-equivalent)
+        self.kv_page_tokens = kv_page_tokens
+        self.kv_budget_bytes = kv_budget_bytes
         self.scheduler: Optional[DecodeScheduler] = None
         # guards scheduler creation: warm generation joiners are NOT
         # serialized by the pool (shared holds), so two may race here
@@ -160,7 +167,10 @@ class FunctionInstance:
                 if self.scheduler is None:
                     self.scheduler = DecodeScheduler(
                         self.model, self.params, n_slots=self.gen_slots,
-                        cache_len=self.gen_cache_len, metrics=self.metrics)
+                        cache_len=self.gen_cache_len,
+                        kv_page_tokens=self.kv_page_tokens,
+                        kv_budget_bytes=self.kv_budget_bytes,
+                        metrics=self.metrics)
         return self.scheduler
 
     def generate(self, spec: GenerateSpec, *,
@@ -181,7 +191,22 @@ class FunctionInstance:
         prompt = _as_prompt(spec.prompt)
         n_prompt = int(prompt.shape[1])
         # fail before the expensive load, not after
-        validate_spec(spec, n_prompt, self.gen_cache_len)
+        if self.kv_page_tokens:
+            n_pages = paged_page_count(
+                self.model, page_tokens=self.kv_page_tokens,
+                budget_bytes=self.kv_budget_bytes,
+                n_slots=self.gen_slots, cache_len=self.gen_cache_len)
+            # per-request ceiling mirrors DecodeScheduler's np_max
+            # default (page-table width = ceil(cache_len / pt))
+            np_max = max(1, min(
+                n_pages, -(-self.gen_cache_len // self.kv_page_tokens)))
+            sched = self.scheduler
+            validate_spec_paged(
+                spec, n_prompt, page_tokens=self.kv_page_tokens,
+                n_pages=np_max,
+                stats=sched.kvpool.stats() if sched is not None else None)
+        else:
+            validate_spec(spec, n_prompt, self.gen_cache_len)
         if not self.live:
             first: Dict[str, Any] = {}
 
@@ -234,6 +259,8 @@ class InstancePool:
                  instance_factory: Optional[Callable[[], Any]] = None,
                  cache: Optional[WeightCache] = None,
                  gen_slots: int = 8, gen_cache_len: int = 256,
+                 kv_page_tokens: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None,
                  mesh_shape=None, rules=None, compute_quant: bool = False,
                  metrics: Optional[metrics_mod.MetricsRegistry] = None,
                  source=None):
@@ -256,6 +283,8 @@ class InstancePool:
         self.source = source
         self.gen_slots = int(gen_slots)
         self.gen_cache_len = int(gen_cache_len)
+        self.kv_page_tokens = kv_page_tokens
+        self.kv_budget_bytes = kv_budget_bytes
         self.mesh_shape = mesh_shape
         self.rules = rules
         self.compute_quant = compute_quant
@@ -301,6 +330,8 @@ class InstancePool:
                                 cache=self.cache,
                                 gen_slots=self.gen_slots,
                                 gen_cache_len=self.gen_cache_len,
+                                kv_page_tokens=self.kv_page_tokens,
+                                kv_budget_bytes=self.kv_budget_bytes,
                                 mesh_shape=self.mesh_shape,
                                 rules=self.rules,
                                 compute_quant=self.compute_quant,

@@ -8,6 +8,8 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention as decode_pallas
+from repro.kernels.decode_attention import (decode_attention_paged
+                                            as paged_pallas)
 from repro.kernels.flash_attention import flash_attention as flash_pallas
 from repro.kernels.rglru_scan import rglru_scan as rglru_pallas
 from repro.kernels.ssd_scan import ssd_scan as ssd_pallas
@@ -115,6 +117,84 @@ def test_decode_ring_buffer_semantics():
     o_pal = decode_pallas(q, keys, vals, pos, window=W, bs=8, interpret=True)
     np.testing.assert_allclose(np.asarray(o_pal), np.asarray(out),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+def _paged_from_slotted(kc, vc, NP, pt, n_garbage=0):
+    """Scatter a (B, K, S, dh) slotted cache into page pools + tables;
+    page order is deliberately shuffled.  ``n_garbage`` extra table
+    columns point at an arbitrary live page (rows beyond the logical
+    extent, whose masking must zero them exactly)."""
+    B, K, S, dh = kc.shape
+    assert S == NP * pt
+    P = B * NP + 2                         # two never-referenced pages
+    perm = np.random.default_rng(7).permutation(B * NP)
+    tables = np.full((B, NP + n_garbage), perm[0], np.int32)
+    k_pages = np.array(arr(P, K, pt, dh, dtype=kc.dtype))  # garbage fill
+    v_pages = np.array(arr(P, K, pt, dh, dtype=vc.dtype))
+    for b in range(B):
+        for j in range(NP):
+            pid = int(perm[b * NP + j])
+            tables[b, j] = pid
+            k_pages[pid] = np.asarray(kc[b, :, j * pt:(j + 1) * pt])
+            v_pages[pid] = np.asarray(vc[b, :, j * pt:(j + 1) * pt])
+    return (jnp.asarray(k_pages), jnp.asarray(v_pages),
+            jnp.asarray(tables))
+
+
+@pytest.mark.parametrize("window", [0, 128])
+@pytest.mark.parametrize("pt,bs", [(32, 32), (32, 16), (64, 32)])
+def test_decode_paged_vs_slotted(window, pt, bs):
+    """Paged kernel == slotted kernel on the same logical cache, across
+    divisible and sub-page tile sizes."""
+    B, H, K, dh, S = 3, 8, 2, 64, 128
+    q = arr(B, H, dh)
+    kc, vc = arr(B, K, S, dh), arr(B, K, S, dh)
+    pos = jnp.asarray([3, 100, 127], jnp.int32)
+    o_slot = ref.decode_attention(q, kc, vc, pos, window=window)
+    k_pages, v_pages, tables = _paged_from_slotted(kc, vc, S // pt, pt)
+    o_ref = ref.decode_attention_paged(q, k_pages, v_pages, tables, pos,
+                                       window=window)
+    np.testing.assert_array_equal(np.asarray(o_ref), np.asarray(o_slot))
+    o_pal = paged_pallas(q, k_pages, v_pages, tables, pos, window=window,
+                         bs=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_slot),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_paged_ragged_tables():
+    """Table columns beyond the logical extent hold arbitrary page ids:
+    their positions exceed ``pos`` so masking must zero them exactly."""
+    B, H, K, dh, S, pt = 2, 4, 2, 32, 64, 16
+    q = arr(B, H, dh)
+    kc, vc = arr(B, K, S, dh), arr(B, K, S, dh)
+    pos = jnp.asarray([10, 63], jnp.int32)
+    o_slot = ref.decode_attention(q, kc, vc, pos)
+    k_pages, v_pages, tables = _paged_from_slotted(kc, vc, S // pt, pt,
+                                                   n_garbage=2)
+    o_ref = ref.decode_attention_paged(q, k_pages, v_pages, tables, pos)
+    np.testing.assert_array_equal(np.asarray(o_ref), np.asarray(o_slot))
+    o_pal = paged_pallas(q, k_pages, v_pages, tables, pos, bs=16,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_slot),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_paged_ops_dispatch():
+    """ops.decode_attention_paged (registry wrapper) matches the oracle
+    in whatever mode this environment resolved."""
+    B, H, K, dh, S, pt = 2, 4, 2, 32, 64, 16
+    q = arr(B, H, dh)
+    kc, vc = arr(B, K, S, dh), arr(B, K, S, dh)
+    pos = jnp.asarray([7, 60], jnp.int32)
+    k_pages, v_pages, tables = _paged_from_slotted(kc, vc, S // pt, pt)
+    o_ref = ref.decode_attention_paged(q, k_pages, v_pages, tables, pos)
+    o = ops.decode_attention_paged(q, k_pages, v_pages, tables, pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 # ---------------------------------------------------------------------------
